@@ -1,0 +1,4 @@
+"""repro: low-precision posit arithmetic (PHEE, Mallasén et al. 2025) as a
+production JAX/Pallas framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

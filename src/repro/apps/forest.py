@@ -1,0 +1,102 @@
+"""Random forest: offline CART training (numpy, float64) + format-
+parametrized inference in JAX (the wearable side of the paper's pipeline).
+
+Trees are exported to fixed-depth arrays so inference is a sequence of
+gathers + comparisons; posit comparisons are exact integer compares on
+hardware, so only the FEATURES and THRESHOLDS are format-rounded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arith import Arith
+
+
+@dataclasses.dataclass
+class Forest:
+    feat: np.ndarray    # (T, nodes) int32 feature index (-1 = leaf)
+    thresh: np.ndarray  # (T, nodes) float64
+    value: np.ndarray   # (T, nodes) float64 leaf probability
+    depth: int
+
+
+def _gini(y):
+    p = y.mean() if len(y) else 0.0
+    return p * (1 - p)
+
+
+def _train_tree(X, y, rng, depth, min_leaf=4, n_feat_sub=None):
+    nodes = 2 ** (depth + 1) - 1
+    feat = np.full(nodes, -1, np.int32)
+    thresh = np.zeros(nodes)
+    value = np.zeros(nodes)
+
+    def build(node, idx, d):
+        value[node] = y[idx].mean() if len(idx) else 0.0
+        if d == depth or len(idx) < 2 * min_leaf or len(set(y[idx])) == 1:
+            return
+        feats = rng.choice(X.shape[1], n_feat_sub or X.shape[1], replace=False)
+        best = (None, None, np.inf)
+        for f in feats:
+            vals = X[idx, f]
+            qs = np.quantile(vals, np.linspace(0.1, 0.9, 9))
+            for t in qs:
+                l = idx[vals <= t]
+                r = idx[vals > t]
+                if len(l) < min_leaf or len(r) < min_leaf:
+                    continue
+                score = len(l) * _gini(y[l]) + len(r) * _gini(y[r])
+                if score < best[2]:
+                    best = (f, t, score)
+        if best[0] is None:
+            return
+        f, t, _ = best
+        feat[node] = f
+        thresh[node] = t
+        vals = X[idx, f]
+        build(2 * node + 1, idx[vals <= t], d + 1)
+        build(2 * node + 2, idx[vals > t], d + 1)
+
+    build(0, np.arange(len(y)), 0)
+    return feat, thresh, value
+
+
+def train_forest(X: np.ndarray, y: np.ndarray, n_trees: int = 20,
+                 depth: int = 6, seed: int = 0) -> Forest:
+    rng = np.random.default_rng(seed)
+    feats, threshs, values = [], [], []
+    n = len(y)
+    n_feat_sub = max(2, int(np.sqrt(X.shape[1])))
+    for t in range(n_trees):
+        boot = rng.integers(0, n, n)
+        f, th, v = _train_tree(X[boot], y[boot], rng, depth,
+                               n_feat_sub=n_feat_sub)
+        feats.append(f)
+        threshs.append(th)
+        values.append(v)
+    return Forest(np.stack(feats), np.stack(threshs), np.stack(values), depth)
+
+
+def forest_predict(ar: Arith, forest: Forest, X: jax.Array) -> jax.Array:
+    """X: (B, F) features already in the target format. Returns P(cough)."""
+    feat = jnp.asarray(forest.feat)
+    thresh = ar.rnd(jnp.asarray(forest.thresh, X.dtype))
+    value = ar.rnd(jnp.asarray(forest.value, X.dtype))
+    T = feat.shape[0]
+    B = X.shape[0]
+
+    node = jnp.zeros((B, T), jnp.int32)
+    for _ in range(forest.depth):
+        f = feat[jnp.arange(T)[None], node]            # (B, T)
+        th = thresh[jnp.arange(T)[None], node]
+        x = jnp.take_along_axis(X, jnp.maximum(f, 0), axis=1)
+        go_left = x <= th                               # posit cmp == int cmp
+        nxt = jnp.where(go_left, 2 * node + 1, 2 * node + 2)
+        node = jnp.where(f < 0, node, nxt)
+    probs = value[jnp.arange(T)[None], node]            # (B, T)
+    return ar.mean(probs, axis=-1)

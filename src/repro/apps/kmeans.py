@@ -1,0 +1,33 @@
+"""k-means clustering in a chosen arithmetic format (BayeSlope's last stage;
+the paper's example of an *unsupervised* workload whose dynamic range killed
+fixed point)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arith import Arith
+
+
+def kmeans_1d(ar: Arith, x: jax.Array, k: int = 2, iters: int = 12
+              ) -> jax.Array:
+    """1-D k-means, all arithmetic rounded to the format. Returns centroids."""
+    x = ar.rnd(x)
+    lo, hi = jnp.min(x), jnp.max(x)
+    cent = ar.rnd(jnp.linspace(lo, hi, k).astype(x.dtype))
+    for _ in range(iters):
+        d = jnp.abs(ar.sub(x[:, None], cent[None, :]))
+        assign = jnp.argmin(d, axis=1)
+        new = []
+        for j in range(k):
+            m = assign == j
+            cnt = jnp.maximum(m.sum(), 1).astype(x.dtype)
+            # pre-scaled accumulation: divide members by the count, THEN sum
+            # (keeps the running sum inside the format's range — IEEE formats
+            # have no quire, so their sums round/overflow per-add)
+            contrib = ar.div(jnp.where(m, x, 0.0), cnt)
+            new.append(ar.sum(contrib, axis=-1))
+        cent = jnp.stack(new)
+    return cent

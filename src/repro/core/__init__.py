@@ -1,0 +1,24 @@
+# The paper's primary contribution: low-precision posit arithmetic as a
+# first-class storage/compute format, realized for TPU-class hardware.
+from .formats import (  # noqa: F401
+    ALL_FORMATS,
+    BF16,
+    FLOAT_FORMATS,
+    FP8E4M3,
+    FP8E5M2,
+    FP16,
+    FP32,
+    POSIT8,
+    POSIT10,
+    POSIT12,
+    POSIT16,
+    POSIT16E3,
+    POSIT24,
+    POSIT32,
+    POSIT_FORMATS,
+    FloatFormat,
+    PositFormat,
+    get_format,
+)
+from .posit import decode, encode, round_to_posit  # noqa: F401
+from .floatsim import round_to_float  # noqa: F401

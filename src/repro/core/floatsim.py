@@ -1,0 +1,25 @@
+"""Narrow IEEE-like float simulation via exact ml_dtypes round-trips.
+
+Casting f32→narrow→f32 through XLA's convert ops gives exact RNE semantics:
+fp16/bf16 overflow to ±Inf; fp8e5m2 likewise; fp8e4m3fn (OCP "fn" variant)
+has no Inf and overflows to NaN — which is precisely the failure mode the
+paper reports for BayeSlope under FP8E4M3.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FloatFormat
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def round_to_float(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    out_dtype = x.dtype
+    if fmt.ml_dtype == jnp.float32 and x.dtype == jnp.float64:
+        return x.astype(jnp.float32).astype(out_dtype)
+    if fmt.ml_dtype == jnp.float32:
+        return x
+    return x.astype(fmt.ml_dtype).astype(out_dtype)

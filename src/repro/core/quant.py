@@ -1,0 +1,146 @@
+"""Posit tensor quantization: the paper's technique as a framework feature.
+
+``PositTensor`` carries the narrow bit patterns (the memory/bandwidth side of
+the energy argument); ``dequant`` is the PRAU-decode analogue executed at
+compute time. ``fake_quant`` provides straight-through gradients so the same
+formats can participate in training (QAT-style), and ``scaled`` mode rescales
+tensors toward ±1 where the posit lattice is densest — a beyond-paper
+optimization enabled by the tapered-precision shape of the format.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .floatsim import round_to_float
+from .formats import FloatFormat, PositFormat, get_format
+from .posit import decode, encode, round_to_posit
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PositTensor:
+    """A tensor stored as posit bit patterns (+ optional power-of-two-ish scale)."""
+
+    bits: jax.Array
+    fmt: PositFormat
+    scale: Optional[jax.Array] = None  # value = decode(bits) * scale
+
+    @property
+    def shape(self):
+        return self.bits.shape
+
+    @property
+    def nbytes_effective(self) -> int:
+        """Bytes on the wire if patterns are bit-packed (the ASIC view)."""
+        return (self.bits.size * self.fmt.n + 7) // 8
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        v = decode(self.bits, self.fmt, dtype=dtype)
+        if self.scale is not None:
+            v = v * self.scale.astype(dtype)
+        return v
+
+    # pytree plumbing (fmt is static)
+    def tree_flatten(self):
+        if self.scale is None:
+            return (self.bits,), (self.fmt, False)
+        return (self.bits, self.scale), (self.fmt, True)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, has_scale = aux
+        if has_scale:
+            return cls(children[0], fmt, children[1])
+        return cls(children[0], fmt, None)
+
+
+def quantize(
+    x: jax.Array,
+    fmt: PositFormat,
+    scaled: bool = False,
+    axis: Optional[int] = None,
+) -> PositTensor:
+    """Quantize a float tensor to posit patterns.
+
+    ``scaled=True`` divides by the RMS (per tensor, or per ``axis`` slice)
+    before encoding, exploiting the posit lattice's peak density near ±1;
+    the scale is snapped to a power of two so dequantization is exact.
+    """
+    if not scaled:
+        return PositTensor(encode(x, fmt), fmt, None)
+    if axis is None:
+        rms = jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+    else:
+        rms = jnp.sqrt(jnp.mean(jnp.square(x), axis=axis, keepdims=True) + 1e-30)
+    scale = jnp.exp2(jnp.round(jnp.log2(rms)))
+    return PositTensor(encode(x / scale, fmt), fmt, scale)
+
+
+def dequantize(t: PositTensor, dtype=jnp.float32) -> jax.Array:
+    return t.dequant(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through fake quantization (for QAT / gradient compression studies)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, fmt_name: str) -> jax.Array:
+    """Round onto the format lattice; gradient passes straight through."""
+    fmt = get_format(fmt_name)
+    if isinstance(fmt, PositFormat):
+        return round_to_posit(x, fmt, dtype=x.dtype)
+    return round_to_float(x, fmt)
+
+
+def _fq_fwd(x, fmt_name):
+    return fake_quant(x, fmt_name), None
+
+
+def _fq_bwd(fmt_name, _res, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree weight quantization (serving path)
+# ---------------------------------------------------------------------------
+
+_WEIGHT_LEAVES = {"w", "table", "w_h"}
+_MOE_WEIGHTS = {"w_gate", "w_up", "w_down"}
+
+
+def quantize_params(params, fmt: PositFormat, cast_rest=None):
+    """Quantize genuine weight matrices to posit bits; leave everything else
+    (norm gains, biases, scalars) in float — mirroring the paper's setup
+    where data memory goes narrow but reference/control stays wide.
+
+    Path rules match distributed/rules.py (the Builder naming contract).
+    """
+    import jax.tree_util as jtu
+
+    def names_of(path):
+        out = []
+        for e in path:
+            out.append(str(getattr(e, "key", getattr(e, "name", e))))
+        return out
+
+    def visit(path, x):
+        names = names_of(path)
+        leaf = names[-1] if names else ""
+        is_weight = (leaf in _WEIGHT_LEAVES
+                     or ("moe" in names and leaf in _MOE_WEIGHTS))
+        if is_weight and x.ndim >= 2 and x.dtype in (jnp.float32, jnp.bfloat16):
+            return quantize(x.astype(jnp.float32), fmt, scaled=False)
+        if cast_rest is not None and x.dtype == jnp.float32:
+            return x.astype(cast_rest)
+        return x
+
+    return jtu.tree_map_with_path(visit, params)

@@ -1,0 +1,92 @@
+"""Quire semantics: fused accumulation without intermediate storage rounding.
+
+The paper's quire is a 16n-bit fixed-point register that accumulates up to
+2^31-1 MACs exactly before a single rounding to posit. On TPU there is no
+programmable accumulator format, but the MXU accumulates bf16 products in
+float32 — the same *numerical service* (no rounding to the narrow storage
+format between MACs). This module provides:
+
+* ``quire_dot_exact``   — pure-Python exact oracle (Fractions) for tests.
+* ``qdot``              — JAX analogue: decode posits, accumulate in f32/f64,
+                          single final rounding to the target posit format.
+* ``quire_matmul_ref``  — the jnp oracle used by the Pallas posit matmul.
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import PositFormat
+from .posit import decode, encode
+from .posit_scalar import decode_scalar, encode_scalar
+
+
+# ---------------------------------------------------------------------------
+# Exact oracle
+# ---------------------------------------------------------------------------
+
+def quire_dot_exact(a_bits: np.ndarray, b_bits: np.ndarray, fmt: PositFormat) -> int:
+    """Exact fused dot product of two posit vectors → posit pattern.
+
+    Mirrors the PRAU quire path: products and the running sum are exact; one
+    rounding at the end (QMADD...QROUND sequence in the Xposit ISA). NaR in
+    any operand poisons the result, as in the standard.
+    """
+    total = Fraction(0)
+    for pa, pb in zip(np.asarray(a_bits).ravel(), np.asarray(b_bits).ravel()):
+        va = decode_scalar(int(pa), fmt)
+        vb = decode_scalar(int(pb), fmt)
+        if va is None or vb is None:
+            return fmt.nar_pattern
+        total += va * vb
+    return encode_scalar(total, fmt)
+
+
+# ---------------------------------------------------------------------------
+# TPU-analogue fused ops
+# ---------------------------------------------------------------------------
+
+def qdot(
+    a_bits: jax.Array,
+    b_bits: jax.Array,
+    fmt: PositFormat,
+    acc_dtype=jnp.float32,
+    out_format: Optional[PositFormat] = None,
+) -> jax.Array:
+    """Fused posit dot product: decode → wide-accumulate → single rounding.
+
+    Returns posit bit patterns when ``out_format`` is given, else the wide
+    accumulator value (the common case inside a network, where the next op
+    consumes the MXU's f32 output directly).
+    """
+    va = decode(a_bits, fmt, dtype=acc_dtype)
+    vb = decode(b_bits, fmt, dtype=acc_dtype)
+    acc = jnp.sum(va * vb, dtype=acc_dtype)
+    if out_format is None:
+        return acc
+    return encode(acc, out_format)
+
+
+def quire_matmul_ref(
+    a_bits: jax.Array,
+    b_bits: jax.Array,
+    fmt: PositFormat,
+    acc_dtype=jnp.float32,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Oracle for the Pallas posit matmul: (M,K)·(K,N) posit bits → f32.
+
+    Decode to ``compute_dtype`` (the MXU input format), multiply-accumulate
+    in ``acc_dtype`` (the MXU accumulator = quire analogue).
+    """
+    va = decode(a_bits, fmt, dtype=jnp.float32).astype(compute_dtype)
+    vb = decode(b_bits, fmt, dtype=jnp.float32).astype(compute_dtype)
+    return jax.lax.dot_general(
+        va, vb,
+        dimension_numbers=(((va.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )

@@ -1,0 +1,1 @@
+from .sharding import MeshInfo, logical_spec, shard_leaf  # noqa: F401

@@ -1,0 +1,96 @@
+"""Logical-axis sharding rules for the production meshes.
+
+Single pod:  (data=16, model=16)           — 256 chips
+Multi-pod:   (pod=2, data=16, model=16)    — 512 chips
+
+Logical axes used by the model zoo:
+  batch   → (pod, data)     activations' leading dim
+  vocab   → model            embedding/unembedding tables (padded to /128)
+  heads   → model            attention heads (falls back to replicate if the
+                             head count does not divide the axis — e.g.
+                             granite-moe's 24 heads on a 16-way axis)
+  ff      → model            FFN hidden dim
+  experts → model            MoE expert dim (expert parallelism)
+  dmodel  → None             kept replicated (activations between TP ops)
+
+JAX's NamedSharding requires exact divisibility, so ``logical_spec`` checks
+each dim and degrades to replication rather than failing — the dry-run output
+records where that happened.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshInfo:
+    """Mesh + the role each axis plays."""
+
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]  # batch data-parallel axes, e.g. ("pod", "data")
+    tp_axis: str = "model"
+
+    @property
+    def dp_size(self) -> int:
+        size = 1
+        for a in self.dp_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def pod_axis(self) -> Optional[str]:
+        return "pod" if "pod" in self.mesh.shape else None
+
+    def axis_size(self, name) -> int:
+        if isinstance(name, (tuple, list)):
+            s = 1
+            for a in name:
+                s *= self.mesh.shape[a]
+            return s
+        return self.mesh.shape[name]
+
+
+def _axis_fits(dim_size: int, axis_size: int) -> bool:
+    return dim_size % axis_size == 0
+
+
+def logical_spec(minfo: MeshInfo, dims: Sequence[Tuple[int, Optional[str]]]) -> P:
+    """Build a PartitionSpec from (dim_size, logical_axis) pairs.
+
+    logical_axis ∈ {"batch", "model", None}; degrades to None when the size
+    does not divide the mesh axis.
+    """
+    spec = []
+    for size, logical in dims:
+        if logical is None:
+            spec.append(None)
+        elif logical == "batch":
+            if _axis_fits(size, minfo.dp_size):
+                spec.append(tuple(minfo.dp_axes) if len(minfo.dp_axes) > 1
+                            else minfo.dp_axes[0])
+            else:
+                spec.append(None)
+        elif logical == "model":
+            if _axis_fits(size, minfo.tp_size):
+                spec.append(minfo.tp_axis)
+            else:
+                spec.append(None)
+        else:
+            raise ValueError(f"unknown logical axis {logical!r}")
+    return P(*spec)
+
+
+def shard_leaf(minfo: MeshInfo, dims) -> NamedSharding:
+    return NamedSharding(minfo.mesh, logical_spec(minfo, dims))
+
+
+def replicated(minfo: MeshInfo) -> NamedSharding:
+    return NamedSharding(minfo.mesh, P())

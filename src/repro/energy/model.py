@@ -1,0 +1,119 @@
+"""ASIC energy/area model parameterized by the paper's Tables I–V
+(TSMC 16 nm, 0.8 V, 25 °C, 2.35 ns clock).
+
+Since this container has no synthesis flow, the tables ARE the hardware
+ground truth; the model reproduces the paper's §VI derived numbers (38% area,
+42.3% unit power, 27.1%/19.4% FFT energy savings) and extrapolates app-level
+energy from op counts measured on our format-parametrized kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+CLOCK_NS = 2.35
+
+# Table I — area (µm²)
+AREA_COPROSIT = {
+    "PRAU": 2353.85, "Register File": 878.79, "Controller": 190.56,
+    "Input Buffer": 178.33, "Result FIFO": 80.66, "ALU": 79.11,
+    "Mem Stream FIFO": 63.82, "Decoder": 31.52, "Predecoder": 9.07,
+}
+AREA_FPU_SS = {
+    "FPU": 3726.26, "Register File": 1896.31, "Controller": 211.25,
+    "Input Buffer": 231.41, "Mem Stream FIFO": 63.82, "Decoder": 25.87,
+    "Predecoder": 11.20, "CSR": 112.39, "Compressed Predecoder": 9.38,
+}
+
+# Table II — functional-unit area (µm²)
+AREA_PRAU_UNITS = {"Add": 267, "Mul": 309, "Sqrt": 298, "Div": 778,
+                   "Conversions": 482}
+AREA_FPU_UNITS = {"FMA": 1800, "DivSqrt": 1078, "Conversions": 500}
+
+# Table IV — power (µW) while running the FFT kernel
+POWER_COPROSIT = {
+    "PRAU": 21.4, "Input Buffer": 24.7, "Regfile": 19.1, "Controller": 16.3,
+    "Result FIFO": 10.8, "Mem Stream FIFO": 6.2, "ALU": 5.4, "Decoder": 1.1,
+    "Predecoder": 0.3,
+}
+POWER_FPU_SS = {
+    "FPU": 46.5, "Input Buffer": 31.7, "Regfile": 29.9, "Controller": 16.6,
+    "Mem Stream FIFO": 6.2, "Decoder": 1.0, "Predecoder": 0.4, "CSR": 14.6,
+    "Compressed Predecoder": 0.2,
+}
+POWER_TOTAL = {"coprosit": 115.0, "fpu_ss": 159.0, "fpu_ss_nonasm": 179.0}
+POWER_CPU = 28.0
+POWER_MEM = 129.0
+
+# Table V — per-unit power (µW)
+POWER_PRAU_UNITS = {"Add": 5.74, "Mul": 1.32, "Sqrt": 0.37, "Div": 0.86,
+                    "Conversions": 0.13}
+POWER_FPU_UNITS = {"FMA": 36.1, "DivSqrt": 5.42, "Conversions": 0.7}
+
+# §VI-B — FFT-4096 measurements
+FFT_CYCLES = {"coprosit": 1_495_623, "fpu_ss": 1_483_287,
+              "fpu_ss_nonasm": 1_192_550}
+
+
+def area_total(table: Dict[str, float]) -> float:
+    return sum(table.values())
+
+
+def area_saving_fraction() -> float:
+    """Paper: 'Coprosit exhibits a 38% smaller area footprint'."""
+    return 1.0 - area_total(AREA_COPROSIT) / area_total(AREA_FPU_SS)
+
+
+def unit_power_saving_fraction() -> float:
+    """Paper: 'PRAU + ALU requires 42.3% less power than the FPU'."""
+    prau_alu = POWER_COPROSIT["PRAU"] + POWER_COPROSIT["ALU"]
+    return 1.0 - prau_alu / POWER_FPU_SS["FPU"]
+
+
+def fft_energy_nj(config: str) -> float:
+    """cycles × period × coprocessor power (paper: 404.2 / 554.2 / 501.6 nJ)."""
+    cyc = FFT_CYCLES[config]
+    power_uw = POWER_TOTAL[config]
+    return cyc * CLOCK_NS * 1e-9 * power_uw * 1e-6 * 1e9  # → nJ
+
+
+def fft_energy_saving_fraction(nonasm: bool = False) -> float:
+    base = fft_energy_nj("fpu_ss_nonasm" if nonasm else "fpu_ss")
+    return 1.0 - fft_energy_nj("coprosit") / base
+
+
+@dataclasses.dataclass
+class OpCounts:
+    add: int = 0
+    mul: int = 0
+    div: int = 0
+    sqrt: int = 0
+    conv: int = 0
+
+    def total(self) -> int:
+        return self.add + self.mul + self.div + self.sqrt + self.conv
+
+
+def estimate_app_energy_nj(ops: OpCounts, config: str = "coprosit",
+                           cycles_per_op: float = 1.0,
+                           overhead_factor: float = None) -> float:
+    """App-level energy from op counts.
+
+    ``overhead_factor`` (load/store/control cycles per arithmetic op) is
+    calibrated on the paper's FFT: 4096-point radix-2 has 12·(N/2)·log2 N
+    ≈ 295k arithmetic ops against 1.50 M measured cycles → ≈ 5.1 cycles/op.
+    """
+    if overhead_factor is None:
+        fft_ops = 12 * (4096 // 2) * 12  # ~295k (cmul 6 ops + 2×cadd 4 ops... )
+        overhead_factor = FFT_CYCLES["coprosit"] / fft_ops
+    cycles = ops.total() * cycles_per_op * overhead_factor
+    power_uw = POWER_TOTAL[config]
+    return cycles * CLOCK_NS * 1e-9 * power_uw * 1e-6 * 1e9
+
+
+def fft_op_counts(n: int) -> OpCounts:
+    """Radix-2 DIT complex FFT: N/2·log2N butterflies × (cmul + 2 cadd)."""
+    import math
+    stages = int(math.log2(n))
+    bf = (n // 2) * stages
+    return OpCounts(add=bf * (2 + 4), mul=bf * 4)  # cmul: 4 mul + 2 add

@@ -1,0 +1,113 @@
+"""Shared in-kernel posit bit math (Pallas-safe: no lax.clz — uses the
+smear+popcount idiom, which lowers to TPU vector ops)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.formats import PositFormat
+
+_U32 = jnp.uint32
+
+
+def clz32(x):
+    """Count leading zeros of uint32 via bit-smear + population count."""
+    x = x.astype(_U32)
+    x = x | (x >> _U32(1))
+    x = x | (x >> _U32(2))
+    x = x | (x >> _U32(4))
+    x = x | (x >> _U32(8))
+    x = x | (x >> _U32(16))
+    return (_U32(32) - lax.population_count(x)).astype(jnp.int32)
+
+
+def decode_tile(bits, fmt: PositFormat, dtype=jnp.float32):
+    """Decode a tile of posit patterns (same math as core.posit.decode,
+    written without lax.clz so it lowers inside pallas_call)."""
+    n, es = fmt.n, fmt.es
+    x = bits.astype(jnp.int32).astype(_U32) & _U32(fmt.mask)
+
+    sign = (x >> _U32(n - 1)) & _U32(1)
+    is_zero = x == _U32(0)
+    is_nar = x == _U32(fmt.nar_pattern)
+
+    mag = jnp.where(sign == 1, (~x + _U32(1)) & _U32(fmt.mask), x)
+    y = (mag << _U32(33 - n)).astype(_U32)
+
+    r0 = y >> _U32(31)
+    inv = jnp.where(r0 == 1, ~y, y)
+    k = jnp.minimum(clz32(inv), n - 1)
+    r = jnp.where(r0 == 0, -k, k - 1)
+
+    sh = jnp.minimum(k + 1, 31).astype(_U32)
+    z = jnp.where(k + 1 >= 32, _U32(0), y << sh)
+    if es > 0:
+        e = (z >> _U32(32 - es)).astype(jnp.int32)
+        frac_top = (z << _U32(es)).astype(_U32)
+    else:
+        e = jnp.zeros_like(k)
+        frac_top = z
+
+    scale = r * (1 << es) + e
+    f = frac_top.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+    pw = lax.bitcast_convert_type(
+        (jnp.clip(scale, -126, 127) + 127).astype(_U32) << _U32(23),
+        jnp.float32)
+    val = (jnp.float32(1.0) + f) * pw
+    val = jnp.where(sign == 1, -val, val)
+    val = jnp.where(is_zero, jnp.float32(0.0), val)
+    val = jnp.where(is_nar, jnp.float32(jnp.nan), val)
+    return val.astype(dtype)
+
+
+def encode_tile(v, fmt: PositFormat):
+    """Encode a float32 tile to posit patterns (RNE, saturating)."""
+    n, es = fmt.n, fmt.es
+    U = _U32
+    mbits = 23
+    TBITS = es + mbits
+
+    v = v.astype(jnp.float32)
+    sign = jnp.signbit(v) & (v != 0)
+    is_zero = v == 0
+    is_nar = ~jnp.isfinite(v)
+
+    a = jnp.clip(jnp.abs(v), fmt.minpos, fmt.maxpos)
+    abits = lax.bitcast_convert_type(a, U)
+    biased = (abits >> U(mbits)) & U(0xFF)
+    man = abits & U((1 << mbits) - 1)
+    q = biased.astype(jnp.int32) - 127
+
+    r = q >> es
+    e = (q - (r << es)).astype(U)
+    r_pos = jnp.maximum(r, 0).astype(U)
+    R = jnp.where(r >= 0, ((U(1) << (r_pos + U(1))) - U(1)) << U(1), U(1))
+    nR = jnp.where(r >= 0, r + 2, 1 - r)
+
+    T = (e << U(mbits)) | man
+    shift = nR + TBITS - (n - 1)
+
+    sh_p = jnp.clip(shift, 1, TBITS).astype(U)
+    body_p = (R << (U(TBITS) - sh_p)) | (T >> sh_p)
+    g_p = (T >> (sh_p - U(1))) & U(1)
+    st_p = (T & ((U(1) << (sh_p - U(1))) - U(1))) != 0
+
+    sh_n = jnp.clip(-shift, 0, 31).astype(U)
+    body_n = (R << jnp.clip(TBITS - shift, 0, 63).astype(U)) | (T << sh_n)
+
+    sh_t = jnp.clip(shift - TBITS, 0, 31).astype(U)
+    body_t = R >> sh_t
+
+    body = jnp.where(shift <= 0, body_n,
+                     jnp.where(shift <= TBITS, body_p, body_t))
+    g = jnp.where((shift >= 1) & (shift <= TBITS), g_p, U(0))
+    st = jnp.where((shift >= 1) & (shift <= TBITS), st_p, False)
+
+    body = body + (g & (st.astype(U) | (body & U(1))))
+    body = jnp.minimum(body, U(fmt.maxpos_pattern))
+    body = jnp.maximum(body, U(fmt.minpos_pattern))
+
+    pattern = jnp.where(sign, (~body + U(1)) & U(fmt.mask), body)
+    pattern = jnp.where(is_zero, U(0), pattern)
+    pattern = jnp.where(is_nar, U(fmt.nar_pattern), pattern)
+    return pattern.astype(jnp.uint32).astype(fmt.storage_dtype)

@@ -1,0 +1,68 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On non-TPU backends (this CPU container) the kernels execute in
+``interpret=True`` mode — same kernel body, Python-evaluated — so the whole
+framework remains runnable and testable off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import PositFormat
+
+from .posit_decode import posit_decode_2d
+from .posit_encode import posit_encode_2d
+from .posit_matmul import posit_matmul
+from .posit_kv_attention import posit_kv_attention
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decode(bits: jax.Array, fmt: PositFormat, out_dtype=jnp.float32):
+    """Arbitrary-shape decode: reshaped onto (rows, 128·k) tiles."""
+    shape = bits.shape
+    flat = bits.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % (8 * 128)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    mat = flat.reshape(-1, 128)
+    out = posit_decode_2d(mat, fmt, out_dtype,
+                          block_rows=min(512, mat.shape[0]),
+                          interpret=_interpret())
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def encode(x: jax.Array, fmt: PositFormat):
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % (8 * 128)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    mat = flat.reshape(-1, 128)
+    out = posit_encode_2d(mat, fmt, block_rows=min(512, mat.shape[0]),
+                          interpret=_interpret())
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def matmul(a_bits: jax.Array, b_bits: jax.Array, fmt: PositFormat, **kw):
+    return posit_matmul(a_bits, b_bits, fmt, interpret=_interpret(), **kw)
+
+
+def kv_attention(q: jax.Array, k_bits: jax.Array, v_bits: jax.Array,
+                 length, fmt: PositFormat, bs: int = 512):
+    """Batched wrapper: q (B, KV, G, D); k/v bits (B, S, KV, D)."""
+    length = jnp.asarray(length)
+
+    def per_head(qh, kh, vh):
+        return posit_kv_attention(qh, kh, vh, length, fmt, bs=bs,
+                                  interpret=_interpret())
+
+    per_batch = jax.vmap(per_head, in_axes=(0, 1, 1))       # over KV heads
+    return jax.vmap(per_batch, in_axes=(0, 0, 0))(q, k_bits, v_bits)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: tile-wise posit decode (bits → f32/bf16).
+
+The PRAU-unpack analogue. Memory-bound by design: reads n-bit integer tiles
+from HBM through VMEM, emits floats for the MXU — the HBM traffic is the
+narrow format's, which is the whole energy/bandwidth argument of the paper.
+
+Tiling: (block_rows, 128) — lane-dim multiple of 128, sublane multiple of 8,
+int16 tiles of 512×128 are 128 KiB in VMEM (v5e VMEM ≈ 16 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import PositFormat
+
+from .common import decode_tile
+
+
+def _decode_kernel(bits_ref, out_ref, *, fmt: PositFormat, out_dtype):
+    out_ref[...] = decode_tile(bits_ref[...], fmt, out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "out_dtype", "block_rows",
+                                    "interpret"))
+def posit_decode_2d(bits: jax.Array, fmt: PositFormat,
+                    out_dtype=jnp.float32, block_rows: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """bits: (M, N) posit patterns → (M, N) floats. N must be /128."""
+    M, N = bits.shape
+    bm = min(block_rows, M)
+    bn = min(128, N)
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, fmt=fmt, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        interpret=interpret,
+    )(bits)

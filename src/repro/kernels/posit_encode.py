@@ -1,0 +1,39 @@
+"""Pallas TPU kernel: tile-wise posit encode (f32 → bits), RNE saturating.
+
+Used on the KV-cache write path and for checkpoint/gradient compression —
+the store side of the paper's narrow-memory datapath.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import PositFormat
+
+from .common import encode_tile
+
+
+def _encode_kernel(x_ref, out_ref, *, fmt: PositFormat):
+    out_ref[...] = encode_tile(x_ref[...], fmt)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "block_rows", "interpret"))
+def posit_encode_2d(x: jax.Array, fmt: PositFormat, block_rows: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    M, N = x.shape
+    bm = min(block_rows, M)
+    bn = min(128, N)
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, fmt=fmt),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), fmt.storage_dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: decode-step attention against a posit-quantized KV
+cache — the memory-bound hot spot of the decode_32k / long_500k cells.
+
+For one kv-head group: q (G, D) attends over K/V stored as posit bits
+(S, D). The kernel streams S in blocks, decodes K/V tiles in VMEM, and keeps
+an online-softmax carry — HBM traffic is 2·S·D narrow integers instead of
+bf16/f32, cutting the dominant roofline term by the storage ratio.
+
+Grid: (S // bs,); carries live in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import PositFormat
+
+from .common import decode_tile
+
+NEG_INF = -1e30
+
+
+def _kv_attn_kernel(q_ref, kbits_ref, vbits_ref, len_ref, out_ref,
+                    m_ref, l_ref, acc_ref, *, fmt: PositFormat, bs: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                                  # (G, D) f32
+    k = decode_tile(kbits_ref[...], fmt, jnp.float32)   # (bs, D)
+    v = decode_tile(vbits_ref[...], fmt, jnp.float32)
+    D = q.shape[-1]
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * (D ** -0.5)  # (G, bs)
+    pos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0]
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]                             # (G, 1)
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_new = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _finish():
+        out_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "bs", "interpret"))
+def posit_kv_attention(q: jax.Array, k_bits: jax.Array, v_bits: jax.Array,
+                       length: jax.Array, fmt: PositFormat, bs: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """q: (G, D); k_bits/v_bits: (S, D) posit patterns; length: valid S.
+
+    Returns (G, D) f32 attention output for one kv head. Batch/head axes are
+    mapped with vmap in ops.py.
+    """
+    G, D = q.shape
+    S, D2 = k_bits.shape
+    assert D == D2
+    bs = min(bs, S)
+    assert S % bs == 0
+    grid = (S // bs,)
+    return pl.pallas_call(
+        functools.partial(_kv_attn_kernel, fmt=fmt, bs=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((G, D), lambda i: (0, 0)),
+            pl.BlockSpec((bs, D), lambda i: (i, 0)),
+            pl.BlockSpec((bs, D), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((G, D), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_bits, v_bits, length.reshape(1).astype(jnp.int32))

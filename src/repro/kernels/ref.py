@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import PositFormat
+from repro.core.posit import decode as posit_decode_ref_core
+from repro.core.posit import encode as posit_encode_ref_core
+
+
+def decode_ref(bits: jax.Array, fmt: PositFormat, out_dtype=jnp.float32):
+    return posit_decode_ref_core(bits, fmt, dtype=jnp.float32).astype(out_dtype)
+
+
+def encode_ref(x: jax.Array, fmt: PositFormat):
+    return posit_encode_ref_core(x.astype(jnp.float32), fmt)
+
+
+def matmul_ref(a_bits, b_bits, fmt: PositFormat, compute_dtype=jnp.bfloat16):
+    a = decode_ref(a_bits, fmt).astype(compute_dtype)
+    b = decode_ref(b_bits, fmt).astype(compute_dtype)
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def kv_attention_ref(q, k_bits, v_bits, length, fmt: PositFormat):
+    """q: (G, D); k/v bits: (S, D). Masked softmax attention, f32."""
+    k = decode_ref(k_bits, fmt)
+    v = decode_ref(v_bits, fmt)
+    D = q.shape[-1]
+    logits = (q.astype(jnp.float32) @ k.T) * (D ** -0.5)   # (G, S)
+    mask = jnp.arange(k.shape[0]) < length
+    logits = jnp.where(mask[None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return w @ v

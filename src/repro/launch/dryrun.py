@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. lowers+compiles the full step (scan-over-layers) — the compile proof,
+  3. on the single-pod mesh, re-lowers with scan-unroll knobs flipped and
+     solves for per-block costs (cost_analysis counts loop bodies ONCE —
+     verified empirically; see roofline/analysis.py),
+  4. emits JSON with memory analysis, corrected FLOPs/bytes/collective bytes,
+     analytic MODEL_FLOPS, and the three roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CONFIGS, get_config
+from repro.configs.base import ALL_SHAPES, ModelConfig, ShapeConfig, shape_applies
+from repro.core.policy import AGGRESSIVE_POLICY, NO_QUANT, PAPER_POLICY, QuantPolicy
+from repro.distributed.rules import (batch_shardings, cache_shardings,
+                                     params_shardings)
+from repro.distributed.sharding import MeshInfo
+from repro.launch.mesh import make_mesh_info
+from repro.models import build_model
+from repro.optim.adamw import adamw_init
+from repro.roofline.analysis import analyze_compiled, roofline_terms
+from repro.train.step import make_train_step
+
+POLICIES = {
+    "none": NO_QUANT,
+    "paper": PAPER_POLICY,
+    "aggressive": AGGRESSIVE_POLICY,
+}
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill batch stand-ins for one global step."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "encdec":
+        return {
+            "frames": sds((B, S // 2, cfg.d_model), jnp.bfloat16),
+            "tokens": sds((B, S // 2), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": sds((B, S - cfg.frontend_len), jnp.int32),
+            "frontend": sds((B, cfg.frontend_len, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": sds((B, S), jnp.int32)}
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (see EXPERIMENTS.md §Roofline for the formulas)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    emb = 2 * cfg.padded_vocab * d
+    N = max(cfg.n_active_params() - emb, 1)
+    # attention-context term (quadratic layers only)
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        L_attn = cfg.n_layers + cfg.enc_layers
+    elif cfg.family == "hybrid":
+        L_attn = cfg.n_layers // max(cfg.shared_attn_every, 1)
+    else:
+        L_attn = 0
+    attn_dim = cfg.n_heads * hd
+
+    if shape.kind == "train":
+        flops = 6.0 * N * B * S
+        flops += 12.0 * L_attn * B * S * S * attn_dim * 0.5
+    elif shape.kind == "prefill":
+        flops = 2.0 * N * B * S
+        flops += 4.0 * L_attn * B * S * S * attn_dim * 0.5
+    else:  # decode: one token per sequence against an S-token context
+        flops = 2.0 * N * B
+        flops += 4.0 * L_attn * B * S * attn_dim
+    return flops
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _metrics_diff(a: Dict, b: Dict) -> Dict[str, float]:
+    return {k: max(0.0, b[k] - a[k]) for k in ("flops", "bytes", "coll_bytes")}
+
+
+def _metrics_base(a: Dict) -> Dict[str, float]:
+    return {k: a[k] for k in ("flops", "bytes", "coll_bytes")}
+
+
+def _combine(base: Dict, parts) -> Dict[str, float]:
+    out = dict(base)
+    for mult, d in parts:
+        for k in ("flops", "bytes", "coll_bytes"):
+            out[k] = out.get(k, 0.0) + mult * d[k]
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               policy_name: str = "paper", corrections: bool = True,
+               microbatches: int = 1, zero1: bool = False,
+               zero3: bool = False,
+               timings: Optional[dict] = None) -> Dict:
+    cfg = get_config(arch)
+    shape = ALL_SHAPES[shape_name]
+    policy = POLICIES[policy_name]
+    if not shape_applies(cfg, shape):
+        return {"skipped": True,
+                "reason": "long_500k requires sub-quadratic mixing "
+                          "(see DESIGN.md shape-cell skips)"}
+
+    minfo = make_mesh_info(multi_pod=multi_pod)
+    model = build_model(cfg, minfo, policy)
+    t0 = time.time()
+
+    def compile_current(mb_unroll: int = 1):
+        """Lower+compile the cell's step with the model's current unroll."""
+        with minfo.mesh:
+            if shape.kind == "train":
+                from repro.distributed.rules import zero1_shardings
+                params_sds = _abstract(model.init, jax.random.key(0))
+                state_sds = {"params": params_sds,
+                             "opt": _abstract(adamw_init, params_sds)}
+                opt_sh_fn = zero1_shardings if (zero1 or zero3) \
+                    else params_shardings
+                # zero3: fully shard master params over data as well; XLA
+                # all-gathers each layer's params inside the scan body
+                p_sh_fn = zero1_shardings if zero3 else params_shardings
+                state_sh = {
+                    "params": p_sh_fn(minfo, params_sds),
+                    "opt": {
+                        "m": opt_sh_fn(minfo, params_sds),
+                        "v": opt_sh_fn(minfo, params_sds),
+                        "step": cache_shardings(minfo, jax.ShapeDtypeStruct((), jnp.int32)),
+                    },
+                }
+                batch_sds = input_specs(cfg, shape)
+                batch_sh = batch_shardings(minfo, batch_sds)
+                step = make_train_step(model, minfo, policy,
+                                       microbatches=microbatches,
+                                       mb_unroll=mb_unroll)
+                # donate the train state: the updated state aliases the old
+                # buffers (halves peak for the param/opt side)
+                lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                                  donate_argnums=0) \
+                    .lower(state_sds, batch_sds)
+            else:
+                # serving: posit-quantized weights per policy
+                params_sds = _abstract(model.init, jax.random.key(0))
+                if policy.weights is not None:
+                    from repro.core.quant import quantize_params
+                    params_sds = _abstract(
+                        lambda p: quantize_params(
+                            p, policy.fmt("weights"), cast_rest=jnp.bfloat16),
+                        params_sds)
+                params_sh = params_shardings(minfo, params_sds)
+                B, S = shape.global_batch, shape.seq_len
+
+                if shape.kind == "prefill":
+                    batch_sds = input_specs(cfg, shape)
+                    batch_sh = batch_shardings(minfo, batch_sds)
+                    fn = lambda p, b: model.prefill(p, b)
+                    lowered = jax.jit(fn, in_shardings=(params_sh, batch_sh)) \
+                        .lower(params_sds, batch_sds)
+                else:  # decode: one new token against an S-token cache
+                    if cfg.family == "encdec":
+                        cache_sds = _abstract(
+                            lambda: (model.init_cache(B, S // 2),
+                                     _cross_sds(model, B, S // 2)))
+                    else:
+                        cache_sds = _abstract(lambda: model.init_cache(B, S))
+                    cache_sh = cache_shardings(minfo, cache_sds)
+                    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+                    tok_sh = batch_shardings(minfo, tok_sds)
+                    fn = lambda p, t, c: model.decode_step(p, t, c)
+                    # pin the cache output layout to its input layout: the
+                    # serving loop feeds it straight back in, and without
+                    # this XLA may emit a full cache reshard every step
+                    # (§Perf iteration 1b: -4.3 GB/step on qwen2.5-14b)
+                    lowered = jax.jit(
+                        fn, in_shardings=(params_sh, tok_sh, cache_sh),
+                        out_shardings=(None, cache_sh)) \
+                        .lower(params_sds, tok_sds, cache_sds)
+            compiled = lowered.compile()
+            return analyze_compiled(compiled)
+
+    def _cross_sds(model, B, S_src):
+        """Abstract cross-attention KV state for encdec decode."""
+        cfg = model.cfg
+        fmt = model.policy.fmt("kv_cache")
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        if fmt is None:
+            k = jax.ShapeDtypeStruct((cfg.n_layers, B, S_src, KV, hd), jnp.bfloat16)
+            return (k, k)
+        from repro.core.quant import PositTensor
+        bits = jax.ShapeDtypeStruct((cfg.n_layers, B, S_src, KV, hd),
+                                    fmt.storage_dtype)
+        return (PositTensor(bits, fmt, None), PositTensor(bits, fmt, None))
+
+    # ---- base compile (proof) + memory --------------------------------
+    base = compile_current()
+    t_base = time.time() - t0
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "policy": policy_name,
+        "compile_s": round(t_base, 1),
+        "memory": {k: base[k] for k in
+                   ("peak_bytes_per_device", "arg_bytes_per_device",
+                    "temp_bytes_per_device")},
+        "raw": _metrics_base(base),
+        "coll_breakdown": base["coll_breakdown"],
+    }
+
+    # ---- scan-body corrections (single-pod roofline only) --------------
+    corrected = _metrics_base(base)
+    notes = []
+    if corrections:
+        fam = cfg.family
+        try:
+            if fam in ("dense", "moe", "vlm", "encdec"):
+                model.unroll = 2
+                c2 = compile_current()
+                model.unroll = 1
+                L = cfg.n_layers
+                layer = _metrics_diff(base, c2)
+                if shape.kind == "train" and microbatches > 1:
+                    c_mb = compile_current(mb_unroll=2)
+                    mb_body = _metrics_diff(base, c_mb)
+                    fixed = {k: max(0.0, mb_body[k] - layer[k]) for k in layer}
+                    corrected = _combine(
+                        _metrics_base(base),
+                        [(microbatches - 1, fixed),
+                         (microbatches * L - 1, layer)])
+                    notes.append(
+                        f"mb-aware correction: mb x{microbatches - 1}, "
+                        f"layer x{microbatches * L - 1}")
+                else:
+                    corrected = _combine(_metrics_base(base),
+                                         [(L - 1, layer)])
+                    notes.append(f"unroll-diff correction x{L - 1}")
+            elif fam == "hybrid":
+                model.unrolls = {"outer": 1, "inner": 2}
+                c12 = compile_current()
+                model.unrolls = {"outer": 2, "inner": 1}
+                c21 = compile_current()
+                model.unrolls = {"outer": 1, "inner": 1}
+                mamba = {k: v / 2 for k, v in _metrics_diff(base, c12).items()}
+                g = _metrics_diff(base, c21)
+                shared = {k: max(0.0, g[k] - mamba[k]) for k in mamba}
+                L, ng = cfg.n_layers, model.n_groups
+                corrected = _combine(_metrics_base(base),
+                                     [(L - 2, mamba), (ng - 1, shared)])
+                notes.append(f"hybrid correction: mamba x{L - 2}, shared x{ng - 1}")
+            elif fam == "ssm":
+                model.unrolls = {"outer": 1, "inner": 2, "time": 1}
+                c12 = compile_current()
+                model.unrolls = {"outer": 2, "inner": 1, "time": 1}
+                c21 = compile_current()
+                mlstm = _metrics_diff(base, c12)
+                gdiff = _metrics_diff(base, c21)
+                ng = model.n_groups
+                n_m = ng * 7
+                if shape.kind == "decode":
+                    slstm = {k: max(0.0, gdiff[k] - mlstm[k]) for k in mlstm}
+                    corrected = _combine(_metrics_base(base),
+                                         [(n_m - 1, mlstm), (ng - 1, slstm)])
+                else:
+                    model.unrolls = {"outer": 1, "inner": 1, "time": 2}
+                    c112 = compile_current()
+                    tstep = _metrics_diff(base, c112)
+                    slstm_fixed = {k: max(0.0, gdiff[k] - mlstm[k] - tstep[k])
+                                   for k in mlstm}
+                    S = shape.seq_len
+                    corrected = _combine(
+                        _metrics_base(base),
+                        [(n_m - 1, mlstm), (ng - 1, slstm_fixed),
+                         (ng * S - 1, tstep)])
+                model.unrolls = {"outer": 1, "inner": 1, "time": 1}
+                notes.append("ssm correction: mlstm/slstm/time-step solve")
+        except Exception as e:  # corrections are best-effort
+            notes.append(f"correction failed ({type(e).__name__}: {e}); "
+                         "raw scan-counted numbers reported")
+            corrected = _metrics_base(base)
+
+    mf = model_flops(cfg, shape)
+    n_chips = minfo.dp_size * minfo.tp_size
+    result["corrected"] = corrected
+    result["model_flops_global"] = mf
+    result["model_flops_per_chip"] = mf / n_chips
+    result["useful_ratio"] = (mf / n_chips) / max(corrected["flops"], 1.0)
+    result["terms"] = roofline_terms(
+        corrected["flops"], corrected["bytes"], corrected["coll_bytes"])
+    result["notes"] = notes
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def iter_cells():
+    for arch in sorted(CONFIGS):
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--policy", default="paper", choices=sorted(POLICIES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-corrections", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--zero3", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch, shape_name in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}__{args.policy}" + (
+                f"__mb{args.microbatches}" if args.microbatches > 1 else "") + (
+                "__zero1" if args.zero1 else "") + (
+                "__zero3" if args.zero3 else "")
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip cached] {tag}", flush=True)
+                continue
+            print(f"[cell] {tag}", flush=True)
+            t0 = time.time()
+            try:
+                res = lower_cell(
+                    arch, shape_name, multi_pod=multi, policy_name=args.policy,
+                    corrections=(not args.no_corrections) and not multi,
+                    microbatches=args.microbatches, zero1=args.zero1,
+                    zero3=args.zero3)
+            except Exception:
+                res = {"arch": arch, "shape": shape_name,
+                       "mesh": "multi" if multi else "single",
+                       "error": traceback.format_exc()}
+            res["wall_s"] = round(time.time() - t0, 1)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2, default=str)
+            status = "ERROR" if "error" in res else (
+                "SKIP" if res.get("skipped") else "ok")
+            print(f"    -> {status} ({res['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Model factory: ModelConfig.family → model class."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import QuantPolicy
+from repro.distributed.sharding import MeshInfo
+
+from .encdec import EncDecLM
+from .transformer import DecoderLM
+from .xlstm_model import XLSTMLM
+from .zamba import ZambaLM
+
+FAMILIES = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": DecoderLM,
+    "encdec": EncDecLM,
+    "hybrid": ZambaLM,
+    "ssm": XLSTMLM,
+}
+
+
+def build_model(cfg: ModelConfig, minfo: MeshInfo,
+                policy: QuantPolicy = QuantPolicy()):
+    return FAMILIES[cfg.family](cfg, minfo, policy)

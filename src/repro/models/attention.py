@@ -1,0 +1,278 @@
+"""Attention: GQA/MQA with qk-norm, bias, softcap, local windows; chunked
+online-softmax for long sequences; posit-quantized KV cache for decode.
+
+The KV cache is where the paper's low-precision storage pays off at LM scale:
+decode steps are memory-bound on cache reads, so posit8 storage (validated by
+the paper's §IV-B finding that 8-bit posits keep working where FP8 fails)
+halves-to-quarters the dominant roofline term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import PositFormat
+from repro.core.posit import decode as posit_decode, encode as posit_encode
+from repro.core.quant import PositTensor
+
+from .common import Builder, dense, make_dense, rms_norm, rope, softcap, wval
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVCache:
+    """Fixed-capacity KV cache; storage either bf16 arrays or posit bits."""
+
+    k: object  # jax.Array (B,S,KV,D) bf16  |  PositTensor bits
+    v: object
+    length: jax.Array  # scalar int32: number of valid positions
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.length), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        k = self.k.bits if isinstance(self.k, PositTensor) else self.k
+        return k.shape[1]
+
+    # -- storage ---------------------------------------------------------
+    @staticmethod
+    def create(batch: int, capacity: int, kv_heads: int, head_dim: int,
+               fmt: Optional[PositFormat] = None):
+        shape = (batch, capacity, kv_heads, head_dim)
+        if fmt is None:
+            z = jnp.zeros(shape, jnp.bfloat16)
+            return KVCache(z, z, jnp.zeros((), jnp.int32))
+        bits = jnp.zeros(shape, fmt.storage_dtype)
+        return KVCache(
+            PositTensor(bits, fmt, None), PositTensor(bits, fmt, None),
+            jnp.zeros((), jnp.int32),
+        )
+
+    def read(self, dtype=jnp.bfloat16):
+        def rd(store):
+            if isinstance(store, PositTensor):
+                return store.dequant(jnp.float32).astype(dtype)
+            return store.astype(dtype)
+
+        return rd(self.k), rd(self.v)
+
+    def append(self, k_new: jax.Array, v_new: jax.Array) -> "KVCache":
+        """Write S_new positions at ``length`` (dynamic)."""
+        idx = self.length
+
+        def wr(store, new):
+            if isinstance(store, PositTensor):
+                scaled = new.astype(jnp.float32)
+                if store.scale is not None:
+                    scaled = scaled / store.scale
+                bits_new = posit_encode(scaled, store.fmt)
+                bits = jax.lax.dynamic_update_slice(
+                    store.bits, bits_new, (0, idx, 0, 0))
+                return PositTensor(bits, store.fmt, store.scale)
+            return jax.lax.dynamic_update_slice(
+                store, new.astype(store.dtype), (0, idx, 0, 0))
+
+        return KVCache(wr(self.k, k_new), wr(self.v, v_new),
+                       self.length + k_new.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _mask(qpos, kpos, *, causal: bool, window, kv_len=None):
+    m = (qpos[:, None] - kpos[None, :]) < window
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if kv_len is not None:
+        m &= (kpos < kv_len)[None, :]
+    return m
+
+
+def plain_attention(q, k, v, *, causal, window, cap, q_offset=0, kv_len=None):
+    """Reference/materialized path (short sequences, decode)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (D ** -0.5)
+    logits = softcap(logits, cap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    m = _mask(qpos, kpos, causal=causal, window=window, kv_len=kv_len)
+    logits = jnp.where(m[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal, window, cap,
+                      q_block=512, k_block=512, q_offset=0):
+    """Online-softmax blocked attention — never materializes (Sq, Skv).
+
+    Scans query blocks (outer) and key blocks (inner) with running
+    (max, denom, out) carries; f32 accumulation throughout (quire-style).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Skv)
+    assert Sq % q_block == 0 and Skv % k_block == 0
+    nq, nk = Sq // q_block, Skv // k_block
+
+    qb = q.reshape(B, nq, q_block, KV, G, D)
+    kb = k.reshape(B, nk, k_block, KV, D)
+    vb = v.reshape(B, nk, k_block, KV, D)
+    scale = D ** -0.5
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk
+        qpos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def k_step(carry, kj_blk):
+            m_run, l_run, o_run = carry
+            kj, k_blk, v_blk = kj_blk
+            kpos = kj * k_block + jnp.arange(k_block)
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk,
+                                preferred_element_type=jnp.float32) * scale
+            logits = softcap(logits, cap)
+            msk = (qpos[:, None] - kpos[None, :]) < window
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(msk[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            p = jnp.where(msk[None, None, None], p, 0.0)
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            o_new = o_run * alpha[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        o0 = jnp.zeros((B, KV, G, q_block, D), jnp.float32)
+        (m_f, l_f, o_f), _ = jax.lax.scan(
+            k_step, (m0, l0, o0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = o_f / jnp.maximum(l_f, 1e-30)[..., None]
+        # (B, KV, G, q_block, D) → (B, q_block, H, D)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, q_block, KV * G, D)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    # outs: (nq, B, q_block, H, D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (params + apply)
+# ---------------------------------------------------------------------------
+
+def init_attention(b: Builder, cfg) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": make_dense(b, "wq", d, H * hd, "model", bias=cfg.qkv_bias),
+        "wk": make_dense(b, "wk", d, KV * hd, "model", bias=cfg.qkv_bias),
+        "wv": make_dense(b, "wv", d, KV * hd, "model", bias=cfg.qkv_bias),
+        "wo": make_dense(b, "wo", H * hd, d, None, logical_in="model"),
+    }
+    if cfg.qk_norm:
+        p["q_gamma"] = b.param("q_gamma", (hd,), (None,), init="zeros")
+        p["k_gamma"] = b.param("k_gamma", (hd,), (None,), init="zeros")
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = dense(p["wq"], x).reshape(B, S, H, hd)
+    k = dense(p["wk"], x).reshape(B, S, KV, hd)
+    v = dense(p["wv"], x).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_gamma"])
+        k = rms_norm(k, p["k_gamma"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+BIG_WINDOW = 1 << 30
+
+
+def attention_train(p, x, cfg, *, window=BIG_WINDOW, causal=True):
+    """Full-sequence attention (training)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if S > 1024:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                cap=cfg.attn_softcap)
+    else:
+        out = plain_attention(q, k, v, causal=causal, window=window,
+                              cap=cfg.attn_softcap)
+    return dense(p["wo"], out.reshape(B, S, -1))
+
+
+def attention_prefill(p, x, cfg, cache: KVCache, *, window=BIG_WINDOW,
+                      causal=True):
+    """Full-sequence attention + cache fill. Attention uses the fresh bf16
+    k/v (standard practice); the cache stores the quantized copy that decode
+    will read."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    cache = cache.append(k, v)
+    if S > 1024:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                cap=cfg.attn_softcap)
+    else:
+        out = plain_attention(q, k, v, causal=causal, window=window,
+                              cap=cfg.attn_softcap)
+    return dense(p["wo"], out.reshape(B, S, -1)), cache
+
+
+def attention_decode(p, x, cfg, cache: KVCache, *, window=BIG_WINDOW):
+    """Single-token decode against a (possibly posit-quantized) cache."""
+    B, S_new, _ = x.shape
+    positions = cache.length + jnp.arange(S_new)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S_new))
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    cache = cache.append(k_new, v_new)
+    k, v = cache.read(dtype=x.dtype)
+    out = plain_attention(
+        q, k, v, causal=True, window=window, cap=cfg.attn_softcap,
+        q_offset=cache.length - S_new, kv_len=cache.length)
+    return dense(p["wo"], out.reshape(B, S_new, -1)), cache
+
+
+def cross_attention(p, x, cfg, enc_k, enc_v, enc_len=None):
+    """Decoder→encoder attention (seamless); encoder KV precomputed."""
+    B, S_new, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = dense(p["wq"], x).reshape(B, S_new, H, hd)
+    out = plain_attention(q, enc_k, enc_v, causal=False, window=BIG_WINDOW,
+                          cap=0.0, kv_len=enc_len)
+    return dense(p["wo"], out.reshape(B, S_new, -1))

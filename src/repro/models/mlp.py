@@ -1,0 +1,31 @@
+"""FFN blocks: SwiGLU (llama-family) and GELU (enc-dec)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Builder, dense, make_dense
+
+
+def init_ffn(b: Builder, cfg) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.ffn_kind == "swiglu":
+        return {
+            "w_gate": make_dense(b, "w_gate", d, ff, "model"),
+            "w_up": make_dense(b, "w_up", d, ff, "model"),
+            "w_down": make_dense(b, "w_down", ff, d, None, logical_in="model"),
+        }
+    return {
+        "w_up": make_dense(b, "w_up", d, ff, "model"),
+        "w_down": make_dense(b, "w_down", ff, d, None, logical_in="model"),
+    }
+
+
+def ffn(p, x: jax.Array, cfg) -> jax.Array:
+    if cfg.ffn_kind == "swiglu":
+        g = dense(p["w_gate"], x)
+        u = dense(p["w_up"], x)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(dense(p["w_up"], x).astype(jnp.float32)).astype(x.dtype)
+    return dense(p["w_down"], h)

@@ -1,0 +1,201 @@
+"""Mamba2 (SSD) block: chunked parallel scan for train/prefill, recurrent
+update for decode. Heads shard over the model axis; the recurrent state stays
+f32 (the quire lesson: accumulators must be wide — see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Builder, dense, make_dense, rms_norm, wval
+
+CHUNK = 256
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SSMCache:
+    """Decode-time cache: conv window + recurrent state."""
+
+    conv: jax.Array   # (B, K-1, conv_dim)
+    state: jax.Array  # (B, H, P, N) f32
+
+    def tree_flatten(self):
+        return (self.conv, self.state), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def ssm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    P_ = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = 1  # single B/C group
+    conv_dim = d_in + 2 * G * N
+    return d_in, H, P_, N, G, conv_dim
+
+
+def init_ssm(b: Builder, cfg) -> dict:
+    d = cfg.d_model
+    d_in, H, P_, N, G, conv_dim = ssm_dims(cfg)
+    return {
+        "in_proj": make_dense(b, "in_proj", d, 2 * d_in + 2 * G * N + H, "model"),
+        "conv_w": b.param("conv_w", (cfg.ssm_conv, conv_dim), (None, "model")),
+        "conv_b": b.param("conv_b", (conv_dim,), ("model",), init="zeros"),
+        "A_log": b.param("A_log", (H,), ("model",), init="uniform_pm"),
+        "D": b.param("D", (H,), ("model",), init="ones"),
+        "dt_bias": b.param("dt_bias", (H,), ("model",), init="zeros"),
+        "norm_gamma": b.param("norm_gamma", (d_in,), ("model",), init="zeros"),
+        "out_proj": make_dense(b, "out_proj", d_in, d, None, logical_in="model"),
+    }
+
+
+def _split_proj(p, x, cfg):
+    d_in, H, P_, N, G, conv_dim = ssm_dims(cfg)
+    zxbcdt = dense(p["in_proj"], x)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(p, xBC, cache_conv=None):
+    """Depthwise causal conv, kernel K. xBC: (B,S,C)."""
+    K = p["conv_w"].shape[0]
+    w = wval(p["conv_w"], jnp.float32)
+    bias = wval(p["conv_b"], jnp.float32)
+    xf = xBC.astype(jnp.float32)
+    if cache_conv is None:
+        pad = jnp.zeros((xf.shape[0], K - 1, xf.shape[-1]), jnp.float32)
+    else:
+        pad = cache_conv.astype(jnp.float32)
+    xp = jnp.concatenate([pad, xf], axis=1)
+    out = sum(xp[:, i:i + xf.shape[1]] * w[i] for i in range(K)) + bias
+    new_conv = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return jax.nn.silu(out).astype(xBC.dtype), new_conv.astype(xBC.dtype)
+
+
+def _gates(p, dt):
+    """Per-head discretization: a = exp(-softplus(dt+bias) * exp(A_log))."""
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + wval(p["dt_bias"], jnp.float32))
+    A = jnp.exp(wval(p["A_log"], jnp.float32))
+    log_a = -dtf * A  # (B,S,H), <= 0
+    return dtf, log_a
+
+
+def ssm_train(p, x: jax.Array, cfg, chunk: int = CHUNK) -> jax.Array:
+    y, _ = ssm_forward(p, x, cfg, chunk)
+    return y
+
+
+def ssm_prefill(p, x: jax.Array, cfg, chunk: int = CHUNK):
+    """Chunked forward that also returns the decode-ready cache."""
+    return ssm_forward(p, x, cfg, chunk)
+
+
+def ssm_forward(p, x: jax.Array, cfg, chunk: int = CHUNK):
+    """Chunked SSD over the full sequence → (y, SSMCache)."""
+    B, S, d = x.shape
+    d_in, H, P_, N, G, conv_dim = ssm_dims(cfg)
+    z, xBC_raw, dt = _split_proj(p, x, cfg)
+    K = cfg.ssm_conv
+    conv_tail = xBC_raw[:, -(K - 1):] if K > 1 else xBC_raw[:, :0]
+    xBC, _ = _causal_conv(p, xBC_raw)
+    xs, Bmat, Cmat = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P_)
+    Bmat = Bmat.reshape(B, S, N)  # G=1
+    Cmat = Cmat.reshape(B, S, N)
+    dtf, log_a = _gates(p, dt)
+    xdt = xs.astype(jnp.float32) * dtf[..., None]  # (B,S,H,P)
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    xdt_c = xdt.reshape(B, nc, chunk, H, P_)
+    B_c = Bmat.reshape(B, nc, chunk, N).astype(jnp.float32)
+    C_c = Cmat.reshape(B, nc, chunk, N).astype(jnp.float32)
+    la_c = log_a.reshape(B, nc, chunk, H)
+
+    def chunk_step(h, inp):
+        xdt_k, B_k, C_k, la_k = inp  # (B,chunk,H,P), (B,chunk,N), ., (B,chunk,H)
+        cum = jnp.cumsum(la_k, axis=1)           # (B,chunk,H)
+        total = cum[:, -1]                        # (B,H)
+        # intra-chunk: L[t,s] = exp(cum_t - cum_s) for s<=t  (t,s within chunk)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask BEFORE exp: exp of masked (s>t) entries would overflow and
+        # poison gradients through the where.
+        L = jnp.exp(jnp.where(tri[None, :, :, None], diff, -1e30))
+        CB = jnp.einsum("btn,bsn->bts", C_k, B_k)        # (B,t,s)
+        M = CB[..., None] * L                             # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xdt_k)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("btn,bhpn->bthp", C_k, h) * jnp.exp(cum)[..., None]
+        # state update: h' = exp(total) h + Σ_s exp(total - cum_s) B_s ⊗ xdt_s
+        w_s = jnp.exp(total[:, None] - cum)               # (B,chunk,H)
+        dh = jnp.einsum("bsh,bsn,bshp->bhpn", w_s, B_k, xdt_k)
+        h_new = jnp.exp(total)[:, :, None, None] * h + dh
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, P_, N), jnp.float32)
+    h_fin, ys = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(xdt_c, 1, 0), jnp.moveaxis(B_c, 1, 0),
+         jnp.moveaxis(C_c, 1, 0), jnp.moveaxis(la_c, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P_)
+    y = y + xs.astype(jnp.float32) * wval(p["D"], jnp.float32)[:, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_gamma"])
+    return dense(p["out_proj"], y), SSMCache(conv_tail, h_fin)
+
+
+def ssm_decode(p, x: jax.Array, cfg, cache: SSMCache) -> Tuple[jax.Array, SSMCache]:
+    """Single-step recurrence: h' = a·h + (dt·B)⊗x ; y = C·h' + D·x."""
+    B, S1, d = x.shape
+    assert S1 == 1
+    d_in, H, P_, N, G, conv_dim = ssm_dims(cfg)
+    z, xBC, dt = _split_proj(p, x, cfg)
+    xBC, new_conv = _causal_conv(p, xBC, cache_conv=cache.conv)
+    xs, Bmat, Cmat = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, H, P_)
+    Bv = Bmat.reshape(B, N).astype(jnp.float32)
+    Cv = Cmat.reshape(B, N).astype(jnp.float32)
+    dtf, log_a = _gates(p, dt)
+    a = jnp.exp(log_a.reshape(B, H))
+    xdt = xs.astype(jnp.float32) * dtf.reshape(B, H)[..., None]
+    h_new = a[:, :, None, None] * cache.state + \
+        jnp.einsum("bn,bhp->bhpn", Bv, xdt)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cv)
+    y = y + xs.astype(jnp.float32) * wval(p["D"], jnp.float32)[:, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_gamma"])
+    new_conv = new_conv.astype(cache.conv.dtype)  # keep carry types stable
+    return dense(p["out_proj"], y), SSMCache(new_conv, h_new)
+
+
+def init_ssm_cache(cfg, batch: int) -> SSMCache:
+    d_in, H, P_, N, G, conv_dim = ssm_dims(cfg)
+    K = cfg.ssm_conv
+    return SSMCache(
+        conv=jnp.zeros((batch, K - 1, conv_dim), jnp.bfloat16),
+        state=jnp.zeros((batch, H, P_, N), jnp.float32),
+    )
+
+
+def ssm_sequential_ref(p, x: jax.Array, cfg) -> jax.Array:
+    """Step-by-step oracle used by tests to validate the chunked path."""
+    B, S, d = x.shape
+    cache = init_ssm_cache(cfg, B)
+
+    def step(cache, xt):
+        y, cache = ssm_decode(p, xt[:, None], cfg, cache)
+        return cache, y[:, 0]
+
+    _, ys = jax.lax.scan(step, cache, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,216 @@
+"""Decoder-only LM assembly (dense / MoE / VLM families).
+
+Layers are scanned (stacked params, lax.scan) so lowering stays O(1) in depth;
+the dry-run corrects roofline costs with per-block probes (see launch/dryrun).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import QuantPolicy
+from repro.distributed.sharding import MeshInfo
+
+from . import attention as attn
+from .common import (Builder, COMPUTE_DTYPE, cross_entropy, embed,
+                     init_embedding, rms_norm, stacked, unembed)
+from .mlp import ffn, init_ffn
+from .moe import init_moe, moe_ffn
+
+BIG_WINDOW = 1 << 30
+
+
+class DecoderLM:
+    """Families: dense (qwen/gemma/granite), moe (dbrx/granite-moe), vlm."""
+
+    def __init__(self, cfg: ModelConfig, minfo: MeshInfo,
+                 policy: QuantPolicy = QuantPolicy()):
+        self.cfg = cfg
+        self.minfo = minfo
+        self.policy = policy
+        self.specs = {}
+        self.unroll = 1  # scan unroll (dry-run uses 1 vs 2 for cost diffs)
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        b = Builder(key, self.specs)
+        params = {"embed": init_embedding(b.child("embed"), cfg.padded_vocab,
+                                          cfg.d_model)}
+
+        def layer(i):
+            lb = b.child("layers")
+            p = {
+                "ln1": lb.param("ln1", (cfg.d_model,), (None,), init="zeros"),
+                "ln2": lb.param("ln2", (cfg.d_model,), (None,), init="zeros"),
+                "attn": attn.init_attention(lb.child("attn"), cfg),
+            }
+            if cfg.attn_softcap > 0:  # gemma2 sandwich norms
+                p["ln1_post"] = lb.param("ln1_post", (cfg.d_model,), (None,),
+                                         init="zeros")
+                p["ln2_post"] = lb.param("ln2_post", (cfg.d_model,), (None,),
+                                         init="zeros")
+            if cfg.n_experts:
+                p["moe"] = init_moe(lb.child("moe"), cfg, self.minfo.tp_size)
+            else:
+                p["ffn"] = init_ffn(lb.child("ffn"), cfg)
+            return p
+
+        params["layers"] = stacked(cfg.n_layers, layer)
+        params["final_ln"] = b.param("final_ln", (cfg.d_model,), (None,),
+                                     init="zeros")
+        return params
+
+    # per-layer local/global pattern (gemma2: even layers local)
+    def _windows(self) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.local_window > 0:
+            w = [cfg.local_window if i % 2 == 0 else BIG_WINDOW
+                 for i in range(cfg.n_layers)]
+        else:
+            w = [BIG_WINDOW] * cfg.n_layers
+        return jnp.asarray(w, jnp.int32)
+
+    # -- block ------------------------------------------------------------
+    def _block_train(self, lp, x, window):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"])
+        h = attn.attention_train(lp["attn"], h, cfg, window=window)
+        if "ln1_post" in lp:
+            h = rms_norm(h, lp["ln1_post"])
+        x = x + h
+        h = rms_norm(x, lp["ln2"])
+        if cfg.n_experts:
+            h, aux = moe_ffn(lp["moe"], h, cfg, self.minfo)
+        else:
+            h, aux = ffn(lp["ffn"], h, cfg), jnp.zeros((), jnp.float32)
+        if "ln2_post" in lp:
+            h = rms_norm(h, lp["ln2_post"])
+        return x + h, aux
+
+    def _block_decode(self, lp, x, window, cache):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"])
+        h, cache = attn.attention_decode(lp["attn"], h, cfg, cache,
+                                         window=window)
+        if "ln1_post" in lp:
+            h = rms_norm(h, lp["ln1_post"])
+        x = x + h
+        h = rms_norm(x, lp["ln2"])
+        if cfg.n_experts:
+            h, _ = moe_ffn(lp["moe"], h, cfg, self.minfo)
+        else:
+            h = ffn(lp["ffn"], h, cfg)
+        if "ln2_post" in lp:
+            h = rms_norm(h, lp["ln2_post"])
+        return x + h, cache
+
+    # -- forward ----------------------------------------------------------
+    def _backbone(self, params, x):
+        cfg = self.cfg
+        windows = self._windows()
+
+        def body(carry, inp):
+            x, aux = carry
+            lp, window = inp
+            x, a = self._block_train(lp, x, window)
+            return (x, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   (params["layers"], windows),
+                                   unroll=self.unroll)
+        return rms_norm(x, params["final_ln"]), aux
+
+    def _inputs_embed(self, params, batch):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"])
+        if cfg.frontend == "vision_stub":
+            fe = batch["frontend"].astype(COMPUTE_DTYPE)
+            x = jnp.concatenate([fe, x], axis=1)
+        return x * jnp.asarray(cfg.d_model, COMPUTE_DTYPE) ** 0.5 \
+            if cfg.attn_softcap > 0 else x  # gemma scales embeddings
+
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = self._inputs_embed(params, batch)
+        x, aux = self._backbone(params, x)
+        P = cfg.frontend_len if cfg.frontend == "vision_stub" else 0
+        if P:
+            x = x[:, P:]
+        logits = unembed(params["embed"], x[:, :-1], cfg.final_softcap,
+                         minfo=None if getattr(self, '_no_logit_wsc', False) else self.minfo)
+        ce = cross_entropy(logits, batch["tokens"][:, 1:], cfg.vocab)
+        total = ce + 0.01 * aux / max(cfg.n_layers, 1)
+        return total, {"ce": ce, "aux": aux}
+
+    # -- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, capacity: int):
+        cfg = self.cfg
+        fmt = self.policy.fmt("kv_cache")
+
+        def one(_):
+            return attn.KVCache.create(batch, capacity, cfg.n_kv_heads,
+                                       cfg.resolved_head_dim, fmt=fmt)
+
+        return stacked(cfg.n_layers, one)
+
+    def prefill(self, params, batch, capacity: Optional[int] = None):
+        """Encode a prompt, fill the cache, return last-position logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        capacity = capacity or S
+        if cfg.frontend == "vision_stub":
+            capacity += cfg.frontend_len  # patches occupy cache positions
+        x = self._inputs_embed(params, batch)
+        windows = self._windows()
+        caches = self.init_cache(B, capacity)
+
+        def body(x, inp):
+            lp, window, cache = inp
+            # prefill == train attention + cache write of projected k/v
+            h = rms_norm(x, lp["ln1"])
+            h2, cache = attn.attention_prefill(lp["attn"], h, cfg, cache,
+                                               window=window)
+            if "ln1_post" in lp:
+                h2 = rms_norm(h2, lp["ln1_post"])
+            x = x + h2
+            h = rms_norm(x, lp["ln2"])
+            if cfg.n_experts:
+                h, _ = moe_ffn(lp["moe"], h, cfg, self.minfo)
+            else:
+                h = ffn(lp["ffn"], h, cfg)
+            if "ln2_post" in lp:
+                h = rms_norm(h, lp["ln2_post"])
+            return x + h, cache
+
+        x, caches = jax.lax.scan(body, x, (params["layers"], windows, caches),
+                                 unroll=self.unroll)
+        x = rms_norm(x, params["final_ln"])
+        logits = unembed(params["embed"], x[:, -1:], cfg.final_softcap)
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches):
+        """tokens: (B, 1) → next-token logits; caches updated in place."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        if cfg.attn_softcap > 0:
+            x = x * jnp.asarray(cfg.d_model, COMPUTE_DTYPE) ** 0.5
+        windows = self._windows()
+
+        def body(x, inp):
+            lp, window, cache = inp
+            x, cache = self._block_decode(lp, x, window, cache)
+            return x, cache
+
+        x, caches = jax.lax.scan(body, x, (params["layers"], windows, caches),
+                                 unroll=self.unroll)
+        x = rms_norm(x, params["final_ln"])
+        logits = unembed(params["embed"], x, cfg.final_softcap)
+        return logits, caches

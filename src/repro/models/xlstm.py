@@ -1,0 +1,277 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, inherently sequential → lax.scan over time).
+
+The mLSTM cell with exponential gating and max-stabilizer follows the xLSTM
+paper; the chunkwise form mirrors the SSD trick in ssm.py with an extra
+running-max carry for stabilization. Tests validate chunked == sequential.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Builder, dense, make_dense, rms_norm, wval
+
+CHUNK = 256
+NEG = -1e30
+
+
+def mlstm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model      # up-projection factor 2
+    H = cfg.n_heads                          # 4 for xlstm-1.3b
+    Dh = d_in // H
+    return d_in, H, Dh
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MLSTMCache:
+    C: jax.Array  # (B,H,Dk,Dv) f32 matrix memory
+    n: jax.Array  # (B,H,Dk)    f32 normalizer
+    m: jax.Array  # (B,H)       f32 max stabilizer
+
+    def tree_flatten(self):
+        return (self.C, self.n, self.m), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_mlstm(b: Builder, cfg) -> dict:
+    d = cfg.d_model
+    d_in, H, Dh = mlstm_dims(cfg)
+    return {
+        "w_up": make_dense(b, "w_up", d, d_in, "model"),
+        "w_z": make_dense(b, "w_z", d, d_in, "model"),
+        "wq": make_dense(b, "wq", d_in, d_in, "model"),
+        "wk": make_dense(b, "wk", d_in, d_in, "model"),
+        "wv": make_dense(b, "wv", d_in, d_in, "model"),
+        "w_i": b.param("w_i", (d_in, H), (None, None), scale=0.02),
+        "w_f": b.param("w_f", (d_in, H), (None, None), scale=0.02),
+        "b_i": b.param("b_i", (H,), (None,), init="zeros"),
+        "b_f": b.param("b_f", (H,), (None,), init="ones"),
+        "norm_gamma": b.param("norm_gamma", (d_in,), ("model",), init="zeros"),
+        "w_down": make_dense(b, "w_down", d_in, d, None, logical_in="model"),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    B, S, _ = x.shape
+    d_in, H, Dh = mlstm_dims(cfg)
+    u = dense(p["w_up"], x)
+    z = dense(p["w_z"], x)
+    q = dense(p["wq"], u).reshape(B, S, H, Dh)
+    k = dense(p["wk"], u).reshape(B, S, H, Dh) * (Dh ** -0.5)
+    v = dense(p["wv"], u).reshape(B, S, H, Dh)
+    uf = u.astype(jnp.float32)
+    log_i = (uf @ wval(p["w_i"], jnp.float32)) + wval(p["b_i"], jnp.float32)
+    # forget gate: sigmoid in log space → log f = -softplus(-pre)
+    pre_f = (uf @ wval(p["w_f"], jnp.float32)) + wval(p["b_f"], jnp.float32)
+    log_f = -jax.nn.softplus(-pre_f)         # (B,S,H), <= 0
+    return q, k, v, log_i, log_f, z
+
+
+def mlstm_train(p, x: jax.Array, cfg, chunk: int = CHUNK) -> jax.Array:
+    y, _ = mlstm_forward(p, x, cfg, chunk)
+    return y
+
+
+def mlstm_forward(p, x: jax.Array, cfg, chunk: int = CHUNK):
+    B, S, d = x.shape
+    d_in, H, Dh = mlstm_dims(cfg)
+    q, k, v, log_i, log_f, z = _mlstm_qkvif(p, x, cfg)
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    def cseq(t):  # (B,S,...) → (nc, B, chunk, ...)
+        return jnp.moveaxis(t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                      # (B,H,Dk,Dv), (B,H,Dk), (B,H)
+        q_k, k_k, v_k, li_k, lf_k = inp
+        qf = q_k.astype(jnp.float32)
+        kf = k_k.astype(jnp.float32)
+        vf = v_k.astype(jnp.float32)
+        cumf = jnp.cumsum(lf_k, axis=1)      # (B,chunk,H) inclusive
+        total = cumf[:, -1]                  # (B,H)
+        # log weight of in-chunk source s as seen at step t (s<=t):
+        #   cumf_t - cumf_s + li_s
+        a_s = li_k - cumf                    # (B,chunk,H): li_s - cumf_s
+        # stabilizer per target t: m_t = max(m0 + cumf_t, max_{s<=t}(cumf_t + a_s))
+        run_max_a = jax.lax.associative_scan(jnp.maximum, a_s, axis=1)
+        m_t = cumf + jnp.maximum(m[:, None], run_max_a)   # (B,chunk,H)
+        # intra-chunk attention-like matrix
+        logw = cumf[:, :, None, :] + a_s[:, None, :, :] - m_t[:, :, None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask inside the exp (masked entries can overflow → NaN grads)
+        w_ts = jnp.exp(jnp.where(tri[None, :, :, None], logw, -1e30))
+        qk = jnp.einsum("bthd,bshd->btsh", qf, kf)
+        num_intra = jnp.einsum("btsh,btsh,bshd->bthd", qk, w_ts, vf)
+        den_intra = jnp.einsum("btsh,btsh,bsh->bth", qk, w_ts,
+                               jnp.ones_like(li_k))
+        # inter-chunk: carried memory decayed to step t
+        w_old = jnp.exp(m[:, None] + cumf - m_t)          # (B,chunk,H)
+        num_inter = jnp.einsum("bthd,bhde->bthe", qf, C) * w_old[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qf, n) * w_old
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry update
+        m_new = jnp.maximum(m + total, (total[:, None] + a_s).max(axis=1))
+        w_src = jnp.exp(total[:, None] + a_s - m_new[:, None])  # (B,chunk,H)
+        C_new = jnp.exp(m + total - m_new)[:, :, None, None] * C + \
+            jnp.einsum("bsh,bshd,bshe->bhde", w_src, kf, vf)
+        n_new = jnp.exp(m + total - m_new)[:, :, None] * n + \
+            jnp.einsum("bsh,bshd->bhd", w_src, kf)
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    n0 = jnp.zeros((B, H, Dh), jnp.float32)
+    m0 = jnp.full((B, H), 0.0, jnp.float32)
+    fin, ys = jax.lax.scan(chunk_step, (C0, n0, m0),
+                           (cseq(q), cseq(k), cseq(v), cseq(log_i), cseq(log_f)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y, p["norm_gamma"]) * \
+        jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["w_down"], y), MLSTMCache(*fin)
+
+
+def mlstm_decode(p, x: jax.Array, cfg, cache: MLSTMCache
+                 ) -> Tuple[jax.Array, MLSTMCache]:
+    B, S1, d = x.shape
+    assert S1 == 1
+    d_in, H, Dh = mlstm_dims(cfg)
+    q, k, v, log_i, log_f, z = _mlstm_qkvif(p, x, cfg)
+    qf = q[:, 0].astype(jnp.float32)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    li, lf = log_i[:, 0], log_f[:, 0]        # (B,H)
+    m_new = jnp.maximum(lf + cache.m, li)
+    w_old = jnp.exp(lf + cache.m - m_new)
+    w_in = jnp.exp(li - m_new)
+    C_new = w_old[:, :, None, None] * cache.C + \
+        w_in[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n_new = w_old[:, :, None] * cache.n + w_in[:, :, None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.einsum("bhd,bhd->bh", qf, n_new)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y, p["norm_gamma"]) * \
+        jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["w_down"], y), MLSTMCache(C_new, n_new, m_new)
+
+
+def init_mlstm_cache(cfg, batch: int) -> MLSTMCache:
+    d_in, H, Dh = mlstm_dims(cfg)
+    return MLSTMCache(
+        C=jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        n=jnp.zeros((batch, H, Dh), jnp.float32),
+        m=jnp.zeros((batch, H), jnp.float32),
+    )
+
+
+def mlstm_sequential_ref(p, x: jax.Array, cfg) -> jax.Array:
+    B, S, d = x.shape
+    cache = init_mlstm_cache(cfg, B)
+
+    def step(cache, xt):
+        y, cache = mlstm_decode(p, xt[:, None], cfg, cache)
+        return cache, y[:, 0]
+
+    _, ys = jax.lax.scan(step, cache, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory, sequential (the xLSTM paper keeps it recurrent)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SLSTMCache:
+    c: jax.Array  # (B, d) cell
+    n: jax.Array  # (B, d) normalizer
+    h: jax.Array  # (B, d) hidden
+    m: jax.Array  # (B, d) stabilizer
+
+    def tree_flatten(self):
+        return (self.c, self.n, self.h, self.m), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_slstm(b: Builder, cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "w_x": make_dense(b, "w_x", d, 4 * d, "model"),
+        "w_h": b.param("w_h", (cfg.n_heads, d // cfg.n_heads, 4 * d // cfg.n_heads),
+                       (None, None, "model"), scale=0.02),
+        "bias": b.param("bias", (4 * d,), ("model",), init="zeros"),
+        "norm_gamma": b.param("norm_gamma", (d,), (None,), init="zeros"),
+        "w_out": make_dense(b, "w_out", d, d, None),
+    }
+
+
+def _slstm_step(p, cfg, cache: SLSTMCache, xt_proj: jax.Array
+                ) -> Tuple[SLSTMCache, jax.Array]:
+    """xt_proj: (B, 4d) precomputed input projection for this step."""
+    d = cfg.d_model
+    H = cfg.n_heads
+    u = d // H
+    # recurrent contribution: block-diagonal per head
+    hf = cache.h.reshape(-1, H, u)
+    rec = jnp.einsum("bhu,huv->bhv", hf, wval(p["w_h"], jnp.float32))
+    pre = xt_proj.astype(jnp.float32) + rec.reshape(-1, 4 * d) + \
+        wval(p["bias"], jnp.float32)
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    log_f = -jax.nn.softplus(-fi)
+    m_new = jnp.maximum(log_f + cache.m, ii)
+    c_new = jnp.exp(log_f + cache.m - m_new) * cache.c + jnp.exp(ii - m_new) * zt
+    n_new = jnp.exp(log_f + cache.m - m_new) * cache.n + jnp.exp(ii - m_new)
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMCache(c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_train(p, x: jax.Array, cfg, unroll: int = 1) -> jax.Array:
+    y, _ = slstm_forward(p, x, cfg, unroll=unroll)
+    return y
+
+
+def slstm_forward(p, x: jax.Array, cfg, unroll: int = 1):
+    B, S, d = x.shape
+    xp = dense(p["w_x"], x)  # (B,S,4d)
+    cache = init_slstm_cache(cfg, B)
+
+    def step(cache, xt):
+        cache, h = _slstm_step(p, cfg, cache, xt)
+        return cache, h
+
+    fin, hs = jax.lax.scan(step, cache, jnp.moveaxis(xp, 1, 0),
+                           unroll=unroll)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = rms_norm(y, p["norm_gamma"])
+    return dense(p["w_out"], y), fin
+
+
+def slstm_decode(p, x: jax.Array, cfg, cache: SLSTMCache
+                 ) -> Tuple[jax.Array, SLSTMCache]:
+    xp = dense(p["w_x"], x)[:, 0]
+    cache, h = _slstm_step(p, cfg, cache, xp)
+    y = rms_norm(h[:, None].astype(x.dtype), p["norm_gamma"])
+    return dense(p["w_out"], y), cache
+
+
+def init_slstm_cache(cfg, batch: int) -> SLSTMCache:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMCache(z, z, z, z)

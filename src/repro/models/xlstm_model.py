@@ -1,0 +1,131 @@
+"""xLSTM LM: groups of (7 mLSTM + 1 sLSTM) blocks, two-level scan."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import QuantPolicy
+from repro.distributed.sharding import MeshInfo
+
+from .common import (Builder, cross_entropy, embed, init_embedding, rms_norm,
+                     stacked, unembed)
+from .xlstm import (init_mlstm, init_mlstm_cache, init_slstm,
+                    init_slstm_cache, mlstm_decode, mlstm_forward,
+                    mlstm_train, slstm_decode, slstm_forward, slstm_train)
+
+GROUP = 8  # 7 mLSTM + 1 sLSTM per group
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig, minfo: MeshInfo,
+                 policy: QuantPolicy = QuantPolicy()):
+        assert cfg.n_layers % GROUP == 0
+        self.cfg = cfg
+        self.minfo = minfo
+        self.policy = policy
+        self.specs = {}
+        self.n_groups = cfg.n_layers // GROUP
+        self.unrolls = {"outer": 1, "inner": 1, "time": 1}
+
+    def init(self, key):
+        cfg = self.cfg
+        b = Builder(key, self.specs)
+        params = {"embed": init_embedding(b.child("embed"), cfg.padded_vocab,
+                                          cfg.d_model)}
+
+        def group(i):
+            gb = b.child("group")
+            m = stacked(GROUP - 1, lambda _: {
+                "ln": gb.param("m_ln", (cfg.d_model,), (None,), init="zeros"),
+                "cell": init_mlstm(gb.child("mlstm"), cfg),
+            })
+            s = {
+                "ln": gb.param("s_ln", (cfg.d_model,), (None,), init="zeros"),
+                "cell": init_slstm(gb.child("slstm"), cfg),
+            }
+            return {"mlstm": m, "slstm": s}
+
+        params["groups"] = stacked(self.n_groups, group)
+        params["final_ln"] = b.param("final_ln", (cfg.d_model,), (None,),
+                                     init="zeros")
+        return params
+
+    # -- forward ------------------------------------------------------------
+    def _forward(self, params, x, with_state: bool):
+        cfg = self.cfg
+
+        def mbody(x, lp):
+            h = rms_norm(x, lp["ln"])
+            if with_state:
+                y, st = mlstm_forward(lp["cell"], h, cfg)
+                return x + y, st
+            return x + mlstm_train(lp["cell"], h, cfg), None
+
+        def gbody(x, gp):
+            x, mstates = jax.lax.scan(
+                mbody if not cfg.remat else jax.checkpoint(mbody),
+                x, gp["mlstm"], unroll=self.unrolls["inner"])
+            h = rms_norm(x, gp["slstm"]["ln"])
+            if with_state:
+                y, sstate = slstm_forward(gp["slstm"]["cell"], h, cfg,
+                                          unroll=self.unrolls["time"])
+            else:
+                y, sstate = (slstm_train(gp["slstm"]["cell"], h, cfg,
+                                         unroll=self.unrolls["time"]), None)
+            return x + y, (mstates, sstate)
+
+        x, states = jax.lax.scan(gbody, x, params["groups"],
+                                 unroll=self.unrolls["outer"])
+        return rms_norm(x, params["final_ln"]), states
+
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"])
+        x, _ = self._forward(params, x, with_state=False)
+        logits = unembed(params["embed"], x[:, :-1], minfo=None if getattr(self, '_no_logit_wsc', False) else self.minfo)
+        ce = cross_entropy(logits, batch["tokens"][:, 1:], cfg.vocab)
+        return ce, {"ce": ce}
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(self, batch: int, capacity: int = 0):
+        cfg = self.cfg
+        m = stacked(self.n_groups, lambda _: stacked(
+            GROUP - 1, lambda __: init_mlstm_cache(cfg, batch)))
+        s = stacked(self.n_groups, lambda _: init_slstm_cache(cfg, batch))
+        return {"mlstm": m, "slstm": s}
+
+    def prefill(self, params, batch, capacity: Optional[int] = None):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"])
+        x, states = self._forward(params, x, with_state=True)
+        logits = unembed(params["embed"], x[:, -1:])
+        mstates, sstates = states
+        return logits, {"mlstm": mstates, "slstm": sstates}
+
+    def decode_step(self, params, tokens, caches):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+
+        def mbody(x, inp):
+            lp, c = inp
+            h = rms_norm(x, lp["ln"])
+            y, c = mlstm_decode(lp["cell"], h, cfg, c)
+            return x + y, c
+
+        def gbody(x, inp):
+            gp, mc, sc = inp
+            x, mc = jax.lax.scan(mbody, x, (gp["mlstm"], mc),
+                                 unroll=self.unrolls["inner"])
+            h = rms_norm(x, gp["slstm"]["ln"])
+            y, sc = slstm_decode(gp["slstm"]["cell"], h, cfg, sc)
+            return x + y, (mc, sc)
+
+        x, (mc, sc) = jax.lax.scan(
+            gbody, x, (params["groups"], caches["mlstm"], caches["slstm"]),
+            unroll=self.unrolls["outer"])
+        x = rms_norm(x, params["final_ln"])
+        logits = unembed(params["embed"], x)
+        return logits, {"mlstm": mc, "slstm": sc}

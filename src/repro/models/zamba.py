@@ -1,0 +1,221 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention+MLP block
+invoked every ``shared_attn_every`` layers (weights reused, per-group gate).
+
+Structure for n_layers=81, every=6: 13 groups × 6 mamba layers (=78, scanned
+two-level) each followed by the shared block, then a 3-layer mamba tail.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import QuantPolicy
+from repro.distributed.sharding import MeshInfo
+
+from . import attention as attn
+from .common import (Builder, cross_entropy, embed, init_embedding, rms_norm,
+                     stacked, unembed)
+from .mlp import ffn, init_ffn
+from .ssm import (SSMCache, init_ssm, init_ssm_cache, ssm_decode, ssm_train)
+
+
+class ZambaLM:
+    def __init__(self, cfg: ModelConfig, minfo: MeshInfo,
+                 policy: QuantPolicy = QuantPolicy()):
+        self.cfg = cfg
+        self.minfo = minfo
+        self.policy = policy
+        self.specs = {}
+        every = cfg.shared_attn_every
+        self.n_groups = cfg.n_layers // every
+        self.tail = cfg.n_layers - self.n_groups * every
+        self.every = every
+        self.unrolls = {"outer": 1, "inner": 1}
+
+    def init(self, key):
+        cfg = self.cfg
+        b = Builder(key, self.specs)
+        params = {"embed": init_embedding(b.child("embed"), cfg.padded_vocab,
+                                          cfg.d_model)}
+
+        def mamba_layer(i):
+            lb = b.child("mamba")
+            return {
+                "ln": lb.param("ln", (cfg.d_model,), (None,), init="zeros"),
+                "ssm": init_ssm(lb.child("ssm"), cfg),
+            }
+
+        # grouped mamba layers: (n_groups, every, ...) via double stack
+        def group(i):
+            inner = stacked(self.every, mamba_layer)
+            gb = b.child("group")
+            gate = gb.param("shared_gate", (cfg.d_model,), (None,),
+                            init="zeros")
+            return {"mamba": inner, "gate": gate}
+
+        params["groups"] = stacked(self.n_groups, group)
+        if self.tail:
+            params["tail"] = stacked(self.tail, mamba_layer)
+
+        sb = b.child("shared")
+        params["shared"] = {
+            "ln1": sb.param("ln1", (cfg.d_model,), (None,), init="zeros"),
+            "ln2": sb.param("ln2", (cfg.d_model,), (None,), init="zeros"),
+            "attn": attn.init_attention(sb.child("attn"), cfg),
+            "ffn": init_ffn(sb.child("ffn"), cfg),
+        }
+        params["final_ln"] = b.param("final_ln", (cfg.d_model,), (None,),
+                                     init="zeros")
+        return params
+
+    # -- shared block -----------------------------------------------------
+    def _shared_train(self, sp, x, gate):
+        cfg = self.cfg
+        h = rms_norm(x, sp["ln1"])
+        h = attn.attention_train(sp["attn"], h, cfg)
+        x = x + h * (1.0 + gate.astype(h.dtype))
+        h = rms_norm(x, sp["ln2"])
+        return x + ffn(sp["ffn"], h, cfg)
+
+    def _shared_decode(self, sp, x, gate, cache):
+        cfg = self.cfg
+        h = rms_norm(x, sp["ln1"])
+        h, cache = attn.attention_decode(sp["attn"], h, cfg, cache)
+        x = x + h * (1.0 + gate.astype(h.dtype))
+        h = rms_norm(x, sp["ln2"])
+        return x + ffn(sp["ffn"], h, cfg), cache
+
+    # -- training ----------------------------------------------------------
+    def _mamba_scan_train(self, layers, x):
+        cfg = self.cfg
+
+        def body(x, lp):
+            h = rms_norm(x, lp["ln"])
+            return x + ssm_train(lp["ssm"], h, cfg), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, layers, unroll=self.unrolls["inner"])
+        return x
+
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"])
+        sp = params["shared"]
+
+        def gbody(x, gp):
+            x = self._mamba_scan_train(gp["mamba"], x)
+            x = self._shared_train(sp, x, gp["gate"])
+            return x, None
+
+        if cfg.remat:
+            gbody = jax.checkpoint(gbody)
+        x, _ = jax.lax.scan(gbody, x, params["groups"],
+                            unroll=self.unrolls["outer"])
+        if self.tail:
+            x = self._mamba_scan_train(params["tail"], x)
+        x = rms_norm(x, params["final_ln"])
+        logits = unembed(params["embed"], x[:, :-1], minfo=None if getattr(self, '_no_logit_wsc', False) else self.minfo)
+        ce = cross_entropy(logits, batch["tokens"][:, 1:], cfg.vocab)
+        return ce, {"ce": ce}
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, capacity: int):
+        cfg = self.cfg
+        fmt = self.policy.fmt("kv_cache")
+        ssm_caches = stacked(cfg.n_layers,
+                             lambda _: init_ssm_cache(cfg, batch))
+        kv = stacked(self.n_groups, lambda _: attn.KVCache.create(
+            batch, capacity, cfg.n_kv_heads, cfg.resolved_head_dim, fmt=fmt))
+        return {"ssm": ssm_caches, "kv": kv}
+
+    def decode_step(self, params, tokens, caches):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        sp = params["shared"]
+        every, ng = self.every, self.n_groups
+        ssm_all = caches["ssm"]
+
+        def slice_tree(tree, lo, n):
+            return jax.tree_util.tree_map(lambda t: t[lo:lo + n], tree)
+
+        def mamba_seq(layers, x, sc):
+            def body(x, inp):
+                lp, c = inp
+                h = rms_norm(x, lp["ln"])
+                y, c = ssm_decode(lp["ssm"], h, cfg, c)
+                return x + y, c
+
+            x, sc = jax.lax.scan(body, x, (layers, sc),
+                                 unroll=self.unrolls["inner"])
+            return x, sc
+
+        def gbody(x, inp):
+            gp, sc, kvc = inp
+            x, sc = mamba_seq(gp["mamba"], x, sc)
+            x, kvc = self._shared_decode(sp, x, gp["gate"], kvc)
+            return x, (sc, kvc)
+
+        grouped_ssm = jax.tree_util.tree_map(
+            lambda t: t[: ng * every].reshape(ng, every, *t.shape[1:]), ssm_all)
+        x, (g_ssm, kv) = jax.lax.scan(
+            gbody, x, (params["groups"], grouped_ssm, caches["kv"]),
+            unroll=self.unrolls["outer"])
+        new_ssm = jax.tree_util.tree_map(
+            lambda t: t.reshape(ng * every, *t.shape[2:]), g_ssm)
+        if self.tail:
+            tail_ssm = slice_tree(ssm_all, ng * every, self.tail)
+            x, tail_ssm = mamba_seq(params["tail"], x, tail_ssm)
+            new_ssm = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], 0), new_ssm, tail_ssm)
+        x = rms_norm(x, params["final_ln"])
+        logits = unembed(params["embed"], x)
+        return logits, {"ssm": new_ssm, "kv": kv}
+
+    def prefill(self, params, batch, capacity: Optional[int] = None):
+        """Chunked SSD forward that also emits decode-ready SSM state and
+        fills the shared-attention KV caches."""
+        from .ssm import ssm_prefill
+
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        capacity = capacity or S
+        x = embed(params["embed"], tokens)
+        sp = params["shared"]
+        fmt = self.policy.fmt("kv_cache")
+
+        def mbody(x, lp):
+            h = rms_norm(x, lp["ln"])
+            y, st = ssm_prefill(lp["ssm"], h, cfg)
+            return x + y, st
+
+        def gbody(x, gp):
+            x, mstates = jax.lax.scan(mbody, x, gp["mamba"],
+                                      unroll=self.unrolls["inner"])
+            h = rms_norm(x, sp["ln1"])
+            kvc = attn.KVCache.create(B, capacity, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, fmt=fmt)
+            h2, kvc = attn.attention_prefill(sp["attn"], h, cfg, kvc)
+            x = x + h2 * (1.0 + gp["gate"].astype(h2.dtype))
+            h = rms_norm(x, sp["ln2"])
+            x = x + ffn(sp["ffn"], h, cfg)
+            return x, (mstates, kvc)
+
+        x, (g_ssm, kv) = jax.lax.scan(gbody, x, params["groups"],
+                                      unroll=self.unrolls["outer"])
+        ssm_states = jax.tree_util.tree_map(
+            lambda t: t.reshape(self.n_groups * self.every, *t.shape[2:]),
+            g_ssm)
+        if self.tail:
+            x, tail_states = jax.lax.scan(mbody, x, params["tail"],
+                                          unroll=self.unrolls["inner"])
+            ssm_states = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], 0), ssm_states,
+                tail_states)
+        x = rms_norm(x, params["final_ln"])
+        logits = unembed(params["embed"], x[:, -1:])
+        return logits, {"ssm": ssm_states, "kv": kv}

@@ -1,0 +1,13 @@
+"""LR schedules (warmup-stable-decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, *, peak_lr=3e-4, warmup=100, stable=1000, decay=1000,
+                 floor_frac=0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+    in_decay = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+    dec = peak_lr * (1.0 - (1.0 - floor_frac) * in_decay)
+    return jnp.where(s < warmup + stable, warm, dec)

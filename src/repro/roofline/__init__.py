@@ -1,0 +1,1 @@
+from .analysis import analyze_compiled, collective_bytes, roofline_terms  # noqa: F401

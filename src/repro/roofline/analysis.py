@@ -1,0 +1,101 @@
+"""Roofline terms from compiled XLA artifacts.
+
+cost_analysis() provides per-device HLO FLOPs / bytes-accessed.
+collective bytes are NOT in cost_analysis — we parse the per-partition HLO
+text and sum wire-cost-weighted operand sizes of every collective op.
+
+NOTE (validated empirically in this container): scan/while bodies are counted
+ONCE by cost_analysis regardless of trip count. The dry-run corrects for this
+with the unroll-diff method / analytic block formulas (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+# rough ring-style wire cost multipliers (bytes on the slowest link per chip,
+# relative to the op's result size)
+_WIRE_WEIGHT = {
+    "all-reduce": 2.0,         # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind wire bytes (per device) from per-partition HLO text."""
+    out: Dict[str, float] = {}
+    for shape_str, kind in _COLL_RE.findall(hlo_text):
+        nbytes = _shape_bytes(shape_str) * _WIRE_WEIGHT[kind]
+        out[kind] = out.get(kind, 0.0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def analyze_compiled(compiled) -> Dict[str, float]:
+    """Per-device flops / bytes / collective bytes / memory of a compiled fn."""
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": coll.get("total", 0.0),
+        "coll_breakdown": {k: v for k, v in coll.items() if k != "total"},
+        "peak_bytes_per_device": float(
+            getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)) if ma else 0.0,
+        "arg_bytes_per_device": float(
+            getattr(ma, "argument_size_in_bytes", 0)) if ma else 0.0,
+        "temp_bytes_per_device": float(
+            getattr(ma, "temp_size_in_bytes", 0)) if ma else 0.0,
+    }
+
+
+def roofline_terms(flops: float, bytes_: float, coll: float) -> Dict[str, float]:
+    """Seconds per term, per chip (cost numbers are already per-device)."""
+    t_c = flops / hw.PEAK_BF16_FLOPS
+    t_m = bytes_ / hw.HBM_BW
+    t_x = coll / hw.ICI_LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "bound_s": max(t_c, t_m, t_x),
+        # fraction of roofline: useful-compute time over the bounding term
+        "roofline_fraction": (t_c / max(t_c, t_m, t_x)) if max(t_c, t_m, t_x) else 0.0,
+    }

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the TARGET platform of this port)."""
+
+PEAK_BF16_FLOPS = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_LINK_BW = 50e9             # bytes/s per link (~)
+VMEM_BYTES = 16 * 2 ** 20      # ~16 MiB vector memory per core
+HBM_BYTES = 16 * 2 ** 30       # 16 GiB HBM per chip
+MXU_DIM = 128                  # systolic array tile edge

@@ -1,0 +1,67 @@
+"""Batched serving engine: continuous batching over a fixed-capacity posit
+KV cache. Weights are posit-quantized at load (the paper's deployment mode);
+decode is the memory-bound regime where narrow storage pays directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import QuantPolicy
+from repro.core.quant import quantize_params
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_size: int = 8
+    max_prompt: int = 128
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 → greedy
+
+
+class ServingEngine:
+    def __init__(self, model, params, cfg: ServeConfig,
+                 policy: QuantPolicy = QuantPolicy()):
+        self.model = model
+        self.cfg = cfg
+        self.policy = policy
+        if policy.weights is not None:
+            params = quantize_params(params, policy.fmt("weights"),
+                                     cast_rest=jnp.bfloat16)
+        self.params = params
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, prompts: List[np.ndarray]) -> List[np.ndarray]:
+        """Greedy/temperature decoding for a batch of token prompts."""
+        cfg, model = self.cfg, self.model
+        assert len(prompts) <= cfg.batch_size
+        B = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p  # left-pad (simple batching)
+
+        batch = {"tokens": jnp.asarray(toks)}
+        capacity = plen + cfg.max_new_tokens
+        logits, cache = model.prefill(self.params, batch, capacity=capacity)
+
+        vocab = model.cfg.vocab
+        outs = [list() for _ in range(B)]
+        cur = jnp.argmax(logits[:, -1, :vocab], axis=-1).astype(jnp.int32)
+        key = jax.random.key(0)
+        for t in range(cfg.max_new_tokens):
+            for i in range(B):
+                outs[i].append(int(cur[i]))
+            logits, cache = self._decode(self.params, cur[:, None], cache)
+            lv = logits[:, -1, :vocab]
+            if cfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                cur = jax.random.categorical(
+                    sub, lv / cfg.temperature).astype(jnp.int32)
+            else:
+                cur = jnp.argmax(lv, axis=-1).astype(jnp.int32)
+        return [np.asarray(o, np.int32) for o in outs]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests and benches must see exactly ONE device (the dry-run sets its own
+# 512-device XLA_FLAGS in a subprocess); never set that flag here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

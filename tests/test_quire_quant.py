@@ -1,0 +1,115 @@
+"""Quire semantics, quantization API, straight-through grads, arith layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import POSIT8, POSIT16
+from repro.core.arith import Arith
+from repro.core.posit import decode, encode
+from repro.core.posit_scalar import decode_scalar
+from repro.core.quant import PositTensor, fake_quant, quantize, quantize_params
+from repro.core.quire import qdot, quire_dot_exact
+
+
+# ---------------------------------------------------------------------------
+# Quire: exact oracle vs wide-accumulation analogue
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1))
+def test_quire_exact_vs_f32_accumulation(seed):
+    rng = np.random.default_rng(seed)
+    n = 16
+    a = rng.normal(size=n).astype(np.float32)
+    b = rng.normal(size=n).astype(np.float32)
+    a_bits = np.asarray(encode(jnp.asarray(a), POSIT16))
+    b_bits = np.asarray(encode(jnp.asarray(b), POSIT16))
+    exact_pat = quire_dot_exact(a_bits, b_bits, POSIT16)
+    exact_val = float(decode_scalar(exact_pat, POSIT16))
+    approx = float(qdot(jnp.asarray(a_bits), jnp.asarray(b_bits), POSIT16))
+    # f32 accumulation of 16 posit16 products is within one-ULP-ish
+    assert abs(approx - exact_val) <= max(1e-5, 2e-3 * abs(exact_val))
+
+
+def test_quire_beats_per_op_rounding():
+    """The reason the quire exists: n additions at format precision drift."""
+    ar = Arith.make("fp16")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=2048).astype(np.float32) * 100)
+    seq = float(ar.sum(x))                         # per-add rounding (FPU_ss)
+    arq = Arith.make("posit16")
+    fused = float(arq.sum(x))                      # single rounding (quire)
+    ref = float(jnp.sum(x))
+    assert abs(fused - ref) <= abs(seq - ref) + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Quantization API
+# ---------------------------------------------------------------------------
+def test_posit_tensor_roundtrip_scaled():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32) * 1e-3)
+    for scaled in (False, True):
+        q = quantize(x, POSIT16, scaled=scaled)
+        back = q.dequant()
+        rel = float(jnp.linalg.norm(back - x) / jnp.linalg.norm(x))
+        assert rel < (2e-3 if scaled else 2e-2), (scaled, rel)
+
+
+def test_scaled_beats_unscaled_far_from_one():
+    """Beyond-paper: RMS-snap scaling moves tensors into the posit sweet
+    spot around ±1 (tapered precision)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=4096).astype(np.float32) * 1e-4)
+    e_plain = float(jnp.linalg.norm(quantize(x, POSIT8).dequant() - x))
+    e_scaled = float(jnp.linalg.norm(
+        quantize(x, POSIT8, scaled=True).dequant() - x))
+    assert e_scaled < e_plain
+
+
+def test_fake_quant_straight_through_grad():
+    x = jnp.asarray([0.3, -1.7, 42.0], jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, "posit8") * 2.0))(x)
+    np.testing.assert_array_equal(np.asarray(g), [2.0, 2.0, 2.0])
+
+
+def test_quantize_params_path_rules():
+    params = {
+        "layers": {
+            "attn": {"wq": {"w": jnp.ones((8, 8), jnp.float32)}},
+            "ln1": jnp.ones((4, 8), jnp.float32),  # stacked norm — NOT quantized
+        },
+        "embed": {"table": jnp.ones((16, 8), jnp.float32)},
+    }
+    q = quantize_params(params, POSIT16, cast_rest=jnp.bfloat16)
+    assert isinstance(q["layers"]["attn"]["wq"]["w"], PositTensor)
+    assert isinstance(q["embed"]["table"], PositTensor)
+    assert q["layers"]["ln1"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Arith layer invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["posit16", "posit8", "fp16", "bfloat16"])
+def test_arith_ops_land_on_lattice(name):
+    ar = Arith.make(name)
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.normal(size=128).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=128).astype(np.float32))
+    out = ar.add(ar.rnd(a), ar.rnd(b))
+    # idempotence: results already lie on the format lattice
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ar.rnd(out)))
+
+
+def test_ieee_dot_rounds_each_mac():
+    """IEEE formats have no quire: fp16 dot of many same-sign terms must
+    show accumulation error that posit16 (fused) does not."""
+    n = 4096
+    a = jnp.full((n,), 1.0, jnp.float32)
+    b = jnp.full((n,), 1.0001, jnp.float32)
+    fp16 = float(Arith.make("fp16").dot(a, b))
+    p16 = float(Arith.make("posit16").dot(a, b))
+    ref = float(jnp.sum(a * b))
+    assert abs(p16 - ref) / ref < 1e-3
+    assert abs(fp16 - ref) / ref > 1e-3  # visibly degraded
