@@ -1,0 +1,137 @@
+"""Fleet streaming benchmark: ≥64 simulated wearable patients through the
+cough and R-peak pipelines concurrently, ragged radio-packet arrival,
+per-format throughput (windows/sec) and model energy (nJ/window).
+
+  python benchmarks/stream_bench.py              # 64 patients, warmed run
+  python benchmarks/stream_bench.py --smoke      # CI-sized single pass
+  python benchmarks/stream_bench.py --patients 128 --windows 10
+
+Output follows benchmarks/run.py conventions: ``name,us_per_call,derived``
+CSV rows, one per (task, format) group plus a fleet rollup.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def build_forest(seed: int = 123):
+    from repro.apps.cough import train_reference_forest
+    return train_reference_forest(96, seed, n_trees=10, depth=5)
+
+
+def build_fleet(n_patients: int, n_windows: int, mixed: bool, rng):
+    """Per-patient chunk queues: half cough, half ECG; a quarter of each arm
+    pinned to an IEEE / narrower-posit comparison format when ``mixed``."""
+    from repro.data.biosignals import (cough_stream_signals,
+                                      ecg_stream_signal, ragged_chunks)
+    from repro.stream.pipelines import RPEAK_WINDOW_S
+
+    queues, pins = [], {}
+    n_cough = n_patients // 2
+    for p in range(n_patients):
+        if p < n_cough:
+            pid = f"cough-{p:03d}"
+            a, i, _ = cough_stream_signals(n_windows, seed=p)
+            queues.append((pid, "cough", "audio",
+                           list(ragged_chunks(a, rng, 400, 9600))))
+            queues.append((pid, "cough", "imu",
+                           list(ragged_chunks(i, rng, 4, 60))))
+            if mixed and p % 4 == 3:
+                pins[pid] = "fp16"
+        else:
+            pid = f"ecg-{p - n_cough:03d}"
+            s, _ = ecg_stream_signal(n_windows * RPEAK_WINDOW_S, seed=1000 + p)
+            queues.append((pid, "rpeak", "ecg",
+                           list(ragged_chunks(s[None, :], rng, 50, 1000))))
+            if mixed and p % 4 == 3:
+                pins[pid] = "posit8"
+    return queues, pins
+
+
+def stream_fleet(engine, queues, rng):
+    """Ragged round-robin arrival across every (patient, modality) stream."""
+    # deep-copy the chunk lists: a warmup pass must not drain the real ones
+    queues = [(pid, task, mod, list(chunks))
+              for pid, task, mod, chunks in queues]
+    live = [q for q in queues if q[3]]
+    while live:
+        k = int(rng.integers(len(live)))
+        pid, task, mod, chunks = live[k]
+        engine.ingest(pid, task, mod, chunks.pop(0))
+        if not chunks:
+            live.pop(k)
+    engine.drain()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--patients", type=int, default=None,
+                    help="fleet size (default 64; 8 with --smoke)")
+    ap.add_argument("--windows", type=int, default=None,
+                    help="windows per patient (default 4; 2 with --smoke)")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="dispatch batch cap (default 32; 8 with --smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized defaults + no warmup pass")
+    ap.add_argument("--homogeneous", action="store_true",
+                    help="paper-table formats only (no fp16/posit8 arms)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    smoke_d, full_d = (8, 2, 8), (64, 4, 32)
+    defaults = smoke_d if args.smoke else full_d
+    args.patients = args.patients if args.patients is not None else defaults[0]
+    args.windows = args.windows if args.windows is not None else defaults[1]
+    args.max_batch = (args.max_batch if args.max_batch is not None
+                      else defaults[2])
+    if args.patients < 2:
+        ap.error("--patients must be ≥ 2 (one cough + one ECG arm)")
+
+    from repro.stream import (PrecisionRouter, StreamEngine, cough_pipeline,
+                              rpeak_pipeline)
+
+    t0 = time.perf_counter()
+    forest = build_forest()
+    print(f"# forest trained in {time.perf_counter() - t0:.1f}s",
+          file=sys.stderr)
+
+    rng = np.random.default_rng(args.seed)
+    queues, pins = build_fleet(args.patients, args.windows,
+                               mixed=not args.homogeneous, rng=rng)
+    engine = StreamEngine({"cough": cough_pipeline(forest),
+                           "rpeak": rpeak_pipeline()},
+                          router=PrecisionRouter(patient_formats=pins),
+                          max_batch=args.max_batch,
+                          pad_to_max=True)  # one compiled shape per arm
+
+    if not args.smoke:  # warm the compile caches, then measure steady state
+        t0 = time.perf_counter()
+        stream_fleet(engine, queues, np.random.default_rng(args.seed + 1))
+        print(f"# warmup pass in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+        engine.reset()
+
+    t0 = time.perf_counter()
+    stream_fleet(engine, queues, np.random.default_rng(args.seed + 2))
+    wall = time.perf_counter() - t0
+
+    n = len(engine.results)
+    expect = args.patients * args.windows  # every patient emits each window
+    assert n == expect, f"windows processed {n} != expected {expect}"
+    for key, row in engine.fleet_summary().items():
+        us = 1e6 / row["windows_per_s"] if row["windows_per_s"] else 0.0
+        print(f"stream_bench/{key},{us:.0f},"
+              f"windows={row['windows']};"
+              f"windows_per_s={row['windows_per_s']:.1f};"
+              f"nj_per_window={row['nj_per_window']:.1f}")
+    print(f"stream_bench/wall,0,patients={args.patients};"
+          f"windows={n};elapsed_s={wall:.2f};"
+          f"end_to_end_windows_per_s={n / wall:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,38 +32,49 @@ def enhance(ar: Arith, sig: jnp.ndarray) -> jnp.ndarray:
 
     The smoothing (computed in-format) suppresses single-sample EMG spikes,
     whose slope products otherwise share the R-peak amplitude range.
+
+    Operates over the LAST axis: a full 1-D segment (offline detection) or a
+    (..., B, n) batch of windows (streaming runtime) go through the same ops.
     """
     x = ar.rnd(sig)
-    d = ar.sub(x[1:], x[:-1])
+    n = x.shape[-1]
+    d = ar.sub(x[..., 1:], x[..., :-1])
     ad = jnp.abs(d)
-    enh = ar.mul(ad[:-1], ad[1:])
-    enh = jnp.concatenate([enh[:1], enh, enh[-1:]])
+    enh = ar.mul(ad[..., :-1], ad[..., 1:])
+    enh = jnp.concatenate([enh[..., :1], enh, enh[..., -1:]], axis=-1)
     # moving-window integration (~0.1 s), every add/div in-format.
     # Pre-scaled accumulation again: divide first so IEEE sums stay in range.
     K = 25
     contrib = ar.div(enh, float(K))
-    pad = jnp.concatenate([jnp.zeros(K - 1, enh.dtype), contrib])
-    acc = pad[: enh.shape[0]] * 0.0
+    zeros = jnp.zeros((*enh.shape[:-1], K - 1), enh.dtype)
+    pad = jnp.concatenate([zeros, contrib], axis=-1)
+    acc = pad[..., :n] * 0.0
     for i in range(K):
-        acc = ar.add(acc, pad[i: i + enh.shape[0]])
+        acc = ar.add(acc, pad[..., i: i + n])
     return acc
 
 
 def glf_normalize(ar: Arith, enh: jnp.ndarray) -> jnp.ndarray:
-    """Generalized logistic squashing around the running scale."""
+    """Generalized logistic squashing around the running scale (last axis)."""
     mu = ar.mean(enh, axis=-1)
-    scale = jnp.maximum(mu, 1e-12)
+    scale = jnp.maximum(mu, 1e-12)[..., None]
     z = ar.div(enh, scale)
     # y = 1 / (1 + exp(-(z - 1)))  computed with rounded ops
     e = ar.exp(jnp.clip(ar.sub(1.0, z), -30.0, 30.0))
     return ar.div(1.0, ar.add(1.0, e))
 
 
+def rpeak_window_scores(ar: Arith, windows: jnp.ndarray) -> jnp.ndarray:
+    """Window-level core of BayeSlope stages 1–2, shared by the offline
+    ``detect_rpeaks`` path and the streaming runtime: slope-product
+    enhancement + GLF normalization over the last axis."""
+    return glf_normalize(ar, enhance(ar, windows))
+
+
 def detect_rpeaks(ar: Arith, sig_np: np.ndarray, fs: int = ECG_FS
                   ) -> List[int]:
     sig = jnp.asarray(sig_np, jnp.float32)
-    enh = enhance(ar, sig)
-    norm = glf_normalize(ar, enh)
+    norm = rpeak_window_scores(ar, sig)
 
     # adaptive threshold from 2-means over a ~500-sample subsample (embedded
     # practice; also keeps per-cluster counts where 8-bit-significand IEEE

@@ -44,6 +44,38 @@ def extract_features(ar: Arith, audio: jax.Array, imu: jax.Array) -> jax.Array:
     return ar.rnd(feats)
 
 
+def train_reference_forest(n_windows: int, data_seed: int, *,
+                           n_trees: int = 20, depth: int = 6,
+                           forest_seed: int = 0) -> Forest:
+    """The paper's offline training side: float32-reference-pipeline features
+    on a dedicated dataset → CART forest in float64. Shared by the offline
+    sweep, the streaming bench/demo, and the tests."""
+    audio, imu, labels = cough_dataset(n_windows, data_seed)
+    ref = Arith.make("fp32")
+    X = np.asarray(extract_features(
+        ref, jnp.asarray(audio, jnp.float32),
+        jnp.asarray(imu, jnp.float32)), np.float64)
+    return train_forest(X, labels, n_trees=n_trees, depth=depth,
+                        seed=forest_seed)
+
+
+def make_cough_scorer(fmt_name: str, forest: Forest):
+    """One jit-compiled window-batch function shared by the offline eval and
+    the streaming runtime: (audio(B,2,N), imu(B,9,M)) → P(cough) of shape (B,).
+
+    The per-window computation is fully independent across the batch axis, so
+    the same compiled function can serve any batch size (the stream engine
+    pads dispatches to a few bucket sizes to bound recompilation).
+    """
+    ar = Arith.make(fmt_name)
+
+    @jax.jit
+    def scorer(audio: jax.Array, imu: jax.Array) -> jax.Array:
+        return forest_predict(ar, forest, extract_features(ar, audio, imu))
+
+    return scorer
+
+
 def run_cough_detection(fmt_names, n_windows: int = 200, seed: int = 0,
                         n_train: int = 400) -> Dict[str, Dict[str, float]]:
     """Sweep arithmetic formats; returns {fmt: {auc, fpr_at_tpr95}}.
@@ -53,22 +85,15 @@ def run_cough_detection(fmt_names, n_windows: int = 200, seed: int = 0,
     then the full wearable pipeline is evaluated per-format on held-out
     windows.
     """
-    tr_audio, tr_imu, tr_labels = cough_dataset(n_train, seed + 1000)
+    forest = train_reference_forest(n_train, seed + 1000, forest_seed=seed)
     audio, imu, labels = cough_dataset(n_windows, seed)
-
-    ref = Arith.make("fp32")
-    X_tr = np.asarray(extract_features(
-        ref, jnp.asarray(tr_audio, jnp.float32),
-        jnp.asarray(tr_imu, jnp.float32)), np.float64)
-    forest = train_forest(X_tr, tr_labels, n_trees=20, depth=6, seed=seed)
 
     audio_j = jnp.asarray(audio, jnp.float32)
     imu_j = jnp.asarray(imu, jnp.float32)
     results = {}
     for name in fmt_names:
-        ar = Arith.make(name)
-        X = extract_features(ar, audio_j, imu_j)
-        scores = np.asarray(forest_predict(ar, forest, X), np.float64)
+        scorer = make_cough_scorer(name, forest)
+        scores = np.asarray(scorer(audio_j, imu_j), np.float64)
         results[name] = {
             "auc": auc(scores, labels),
             "fpr_at_tpr95": fpr_at_tpr(scores, labels, 0.95),

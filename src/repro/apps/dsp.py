@@ -124,7 +124,7 @@ def mfcc(ar: Arith, psd: jax.Array, sr: float, n_mel: int = 20,
 def zero_crossing_rate(ar: Arith, x: jax.Array) -> jax.Array:
     s = jnp.sign(x)
     flips = jnp.abs(jnp.diff(s, axis=-1)) > 1
-    return jnp.mean(flips.astype(x.dtype), axis=-1)
+    return ar.mean(flips.astype(x.dtype), axis=-1)
 
 
 def kurtosis(ar: Arith, x: jax.Array) -> jax.Array:

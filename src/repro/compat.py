@@ -1,0 +1,102 @@
+"""Version compatibility for the JAX surface this repo touches.
+
+The codebase targets the modern mesh/shard_map API (``jax.sharding.AxisType``,
+``jax.shard_map``, ``axis_names=``/``check_vma=``).  Containers in the fleet
+pin older JAX (e.g. 0.4.x) where those names live elsewhere or don't exist:
+
+* ``AxisType`` is absent → meshes are built without ``axis_types`` (every axis
+  defaults to Auto there anyway, so semantics are unchanged);
+* ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the kwargs
+  ``check_rep=`` and ``auto=`` (the complement of ``axis_names=``).
+
+Import mesh/shard_map helpers from here instead of from ``jax`` directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+try:  # modern JAX
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # older JAX: no explicit axis types (all axes are Auto)
+    AxisType = None
+
+HAS_AXIS_TYPE = AxisType is not None
+
+try:  # modern JAX re-exports shard_map at top level
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+    _SHARD_MAP_MODERN = True
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_MODERN = False
+
+
+def enable_x64():
+    """Context manager enabling 64-bit mode (moved across JAX versions)."""
+    if hasattr(jax, "enable_x64"):
+        return jax.enable_x64()
+    from jax.experimental import enable_x64 as _e64
+    return _e64()
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``{"axis_types": (Auto,)*n}`` when supported, else ``{}``."""
+    if HAS_AXIS_TYPE:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+    return {}
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    kw = {"devices": devices} if devices is not None else {}
+    try:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             **axis_types_kwargs(len(axis_names)), **kw)
+    except TypeError:  # axis_types kwarg not accepted by this version
+        return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def device_mesh(device_array, axis_names: Sequence[str]):
+    """``jax.sharding.Mesh`` over an explicit ndarray of devices."""
+    from jax.sharding import Mesh
+    try:
+        return Mesh(device_array, axis_names,
+                    **axis_types_kwargs(len(axis_names)))
+    except TypeError:
+        return Mesh(device_array, axis_names)
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """Spec-level mesh (no devices); handles both AbstractMesh signatures."""
+    from jax.sharding import AbstractMesh
+    try:  # modern: AbstractMesh(shape, names, axis_types=...)
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names),
+                            **axis_types_kwargs(len(axis_names)))
+    except TypeError:  # 0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[set] = None,
+              check_vma: Optional[bool] = None):
+    """``shard_map`` accepting the modern kwargs on every JAX version.
+
+    ``axis_names`` — the MANUAL axes (modern spelling).  On old JAX this is
+    translated to ``auto=`` (its complement).  ``check_vma`` maps to
+    ``check_rep`` on old JAX.
+    """
+    kw = {}
+    if _SHARD_MAP_MODERN:
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+    else:
+        if axis_names is not None:
+            kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -42,6 +42,25 @@ class QuantPolicy:
         )
 
 
+def wearable_policy(fmt_name: Optional[str]) -> QuantPolicy:
+    """Streaming-wearable storage policy for one arithmetic format.
+
+    On the wearable side the paper's two tensor classes are the deployed
+    parameters (forest thresholds/leaves, filterbank tables — ``weights``)
+    and the in-flight window features (``activations``); both live in the
+    stream format.  IEEE formats flow through native dtypes (see ``fmt``), so
+    they map to the unquantized policy.
+    """
+    if fmt_name is None or not fmt_name.startswith("posit"):
+        return QuantPolicy()
+    return QuantPolicy(weights=fmt_name, activations=fmt_name)
+
+
+# Per-task streaming defaults from the paper's results: posit16 holds cough
+# AUC at reference (§IV-A / Fig. 4); posit10 holds BayeSlope F1 ≈ 0.975 where
+# fp16 has already dropped and fp8 fails (§IV-B / Fig. 5).
+STREAM_TASK_FORMATS = {"cough": "posit16", "rpeak": "posit10"}
+
 # Paper-faithful default: posit16 storage everywhere the paper stored data,
 # f32 master/accumulators (the paper's FP32 reference remains the baseline).
 PAPER_POLICY = QuantPolicy(weights="posit16", kv_cache="posit16")

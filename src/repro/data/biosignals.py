@@ -151,3 +151,61 @@ def ecg_dataset(n_subjects: int = 20, segments_per_subject: int = 5,
             sig, r = ecg_segment(segment_s, intensity, rng)
             out.append((sig, r))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Continuous per-patient streams (the runtime's ingest side): the same
+# generators as above, but emitted as one long recording per patient plus a
+# ragged chunker that models BLE/radio packetization.
+# ---------------------------------------------------------------------------
+
+def cough_stream_signals(n_windows: int, seed: int
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One patient's continuous recording: ``n_windows`` back-to-back 300 ms
+    events. Returns (audio(2, n·N), imu(9, n·M), labels(n,)) — window k of the
+    stream covers exactly samples [k·N, (k+1)·N) / [k·M, (k+1)·M)."""
+    rng = np.random.default_rng(seed)
+    audios, imus, labels = [], [], []
+    for _ in range(n_windows):
+        a, i, y = cough_window(rng)
+        audios.append(a)
+        imus.append(i)
+        labels.append(y)
+    return (np.concatenate(audios, axis=-1), np.concatenate(imus, axis=-1),
+            np.asarray(labels))
+
+
+def ecg_stream_signal(duration_s: float, seed: int, n_phases: int = 4,
+                      fs: int = ECG_FS) -> Tuple[np.ndarray, np.ndarray]:
+    """One patient's continuous exercise ECG: intensity ramps across
+    ``n_phases`` contiguous segments (rest → intense). Returns
+    (signal(n,), r_peak_sample_indices) with EXACTLY
+    ``round(duration_s·fs)`` samples — callers size ``duration_s`` to cover
+    whole windows, so per-phase flooring must not eat the last one."""
+    rng = np.random.default_rng(seed)
+    n_total = int(round(duration_s * fs))
+    base, rem = divmod(n_total, n_phases)
+    sigs, peaks, offset = [], [], 0
+    for p in range(n_phases):
+        n_p = base + (1 if p < rem else 0)
+        intensity = p / max(n_phases - 1, 1)
+        # generate one sample long, then trim to the exact phase length
+        sig, r = ecg_segment((n_p + 1) / fs, intensity, rng, fs)
+        sig, r = sig[:n_p], r[r < n_p]
+        sigs.append(sig)
+        peaks.append(r + offset)
+        offset += n_p
+    return np.concatenate(sigs), np.concatenate(peaks)
+
+
+def ragged_chunks(arr: np.ndarray, rng, min_samples: int, max_samples: int):
+    """Split ``arr`` along its LAST axis into contiguous chunks of random
+    length in [min_samples, max_samples] — the radio-packet arrival model.
+    Yields views in stream order; concatenating them reproduces ``arr``."""
+    n = arr.shape[-1]
+    pos = 0
+    while pos < n:
+        k = int(rng.integers(min_samples, max_samples + 1))
+        k = min(k, n - pos)
+        yield arr[..., pos: pos + k]
+        pos += k

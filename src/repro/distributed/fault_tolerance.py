@@ -15,7 +15,8 @@ from typing import Callable, List, Optional, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, AxisType
+
+from repro.compat import device_mesh
 
 from .sharding import MeshInfo
 
@@ -52,8 +53,7 @@ def remesh(devices: Optional[List] = None,
     devices = devices if devices is not None else jax.devices()
     dp, tp = largest_valid_mesh(len(devices), cfg)
     arr = np.asarray(devices[: dp * tp]).reshape(dp, tp)
-    mesh = Mesh(arr, ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    mesh = device_mesh(arr, ("data", "model"))
     return MeshInfo(mesh, dp_axes=("data",))
 
 

@@ -1,0 +1,123 @@
+"""Minimal stand-in for the slice of `hypothesis` used by this test suite.
+
+The fleet containers don't ship `hypothesis` and the repo can't add
+dependencies, so ``tests/conftest.py`` registers this module under the
+``hypothesis`` name **only when the real library is absent**.  It implements
+just what the tests import — ``given``, ``settings`` and the ``floats`` /
+``integers`` / ``sampled_from`` strategies — with deterministic per-test
+seeding so failures are reproducible.  No shrinking, no database: a failing
+example is reported verbatim in the raised assertion.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, draw, label):
+        self.draw = draw
+        self.label = label
+
+    def __repr__(self):
+        return f"st.{self.label}"
+
+
+def _floats(min_value=None, max_value=None, *, allow_nan=True,
+            allow_infinity=True, allow_subnormal=True, width=64):
+    ftype = np.float32 if width == 32 else np.float64
+    fin = np.finfo(ftype)
+    lo = float(-fin.max) if min_value is None else float(min_value)
+    hi = float(fin.max) if max_value is None else float(max_value)
+    specials = [v for v in
+                (0.0, -0.0, lo, hi, 1.0, -1.0, 0.5, -0.5, float(fin.tiny),
+                 float(-fin.tiny), float(fin.eps), 3.0, -3.0)
+                if lo <= v <= hi]
+
+    def draw(rng):
+        if specials and rng.uniform() < 0.08:
+            v = specials[int(rng.integers(len(specials)))]
+        elif rng.uniform() < 0.5:
+            # uniform over the allowed interval (clamped to sane width)
+            a, b = max(lo, -1e30), min(hi, 1e30)
+            v = float(rng.uniform(a, b))
+        else:
+            # log-uniform magnitude: exercises the posit taper across regimes
+            max_mag = max(abs(lo), abs(hi), float(fin.tiny))
+            e_hi = np.log2(max_mag)
+            e_lo = np.log2(float(fin.tiny))
+            v = float(2.0 ** rng.uniform(e_lo, e_hi))
+            if rng.uniform() < 0.5:
+                v = -v
+            v = min(max(v, lo), hi)
+        v = float(ftype(v))  # land on a representable value of the width
+        if not allow_subnormal and 0 < abs(v) < float(fin.tiny):
+            v = 0.0
+        if not allow_nan and v != v:
+            v = 0.0
+        if not allow_infinity and np.isinf(v):
+            v = hi if v > 0 else lo
+        return min(max(v, lo), hi)
+
+    return _Strategy(draw, f"floats({lo!r}, {hi!r}, width={width})")
+
+
+def _integers(min_value, max_value):
+    def draw(rng):
+        return int(rng.integers(min_value, max_value + 1))
+
+    return _Strategy(draw, f"integers({min_value}, {max_value})")
+
+
+def _sampled_from(seq):
+    items = list(seq)
+
+    def draw(rng):
+        return items[int(rng.integers(len(items)))]
+
+    return _Strategy(draw, f"sampled_from(<{len(items)} items>)")
+
+
+class strategies:  # mirrors `hypothesis.strategies` as imported by the tests
+    floats = staticmethod(_floats)
+    integers = staticmethod(_integers)
+    sampled_from = staticmethod(_sampled_from)
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Decorator; only max_examples matters here (no deadline enforcement)."""
+
+    def deco(fn):
+        fn._mini_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_mini_settings", None) or {}
+            n = cfg.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            # deterministic per-test seed → reproducible failures
+            rng = np.random.default_rng(zlib.adler32(fn.__name__.encode()))
+            for i in range(n):
+                vals = tuple(s.draw(rng) for s in strats)
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {fn.__name__}{vals!r}"
+                    ) from e
+
+        # pytest must not see the wrapped signature (it would demand fixtures
+        # for the strategy-supplied parameters)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

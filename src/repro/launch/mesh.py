@@ -7,8 +7,8 @@ Multi-pod:   (pod=2, data=16, model=16) = 512 chips
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
+from repro.compat import device_mesh, make_mesh
 from repro.distributed.sharding import MeshInfo
 
 
@@ -16,20 +16,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     import numpy as np
-    from jax.sharding import Mesh
 
     n = int(np.prod(shape))
     devs = jax.devices()
     if len(devs) == n:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+        return make_mesh(shape, axes)
     if len(devs) < n:
         raise RuntimeError(
             f"need {n} devices for mesh {shape}; have {len(devs)} — run under "
             "dryrun.py which sets --xla_force_host_platform_device_count")
     # placeholder-device container has 512; single-pod uses the first 256
     arr = np.asarray(devs[:n]).reshape(shape)
-    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return device_mesh(arr, axes)
 
 
 def make_mesh_info(*, multi_pod: bool = False) -> MeshInfo:
@@ -39,6 +37,5 @@ def make_mesh_info(*, multi_pod: bool = False) -> MeshInfo:
 
 
 def make_debug_mesh_info(n_data: int = 1, n_model: int = 1) -> MeshInfo:
-    mesh = jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((n_data, n_model), ("data", "model"))
     return MeshInfo(mesh, dp_axes=("data",))

@@ -65,6 +65,8 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
 def analyze_compiled(compiled) -> Dict[str, float]:
     """Per-device flops / bytes / collective bytes / memory of a compiled fn."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jaxlib: one dict per partition
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())
     return {

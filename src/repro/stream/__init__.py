@@ -1,0 +1,25 @@
+"""Continuous multi-patient streaming runtime.
+
+The layer between the arithmetic core and the applications: ring-buffered
+ingest of interleaved per-patient sensor chunks, exactly-once window
+emission on a fixed hop grid, per-patient precision routing (posit16 cough /
+posit10 R-peak per the paper's results), cross-patient batched dispatch
+through shared jit-compiled pipelines, and per-window energy accounting
+against the paper's ASIC model.
+"""
+from .accounting import (EnergyLedger, cough_window_op_counts,
+                         energy_config_for_format, rpeak_window_op_counts)
+from .engine import StreamEngine, WindowResult, bucket_size
+from .pipelines import (COUGH_SPEC, RPEAK_SPEC, RPEAK_WINDOW_S, Pipeline,
+                        cough_pipeline, rpeak_pipeline)
+from .ring import ModalitySpec, RingBuffer, Window, WindowDispatcher, WindowSpec
+from .router import PrecisionRouter, Route
+
+__all__ = [
+    "COUGH_SPEC", "RPEAK_SPEC", "RPEAK_WINDOW_S",
+    "EnergyLedger", "ModalitySpec", "Pipeline", "PrecisionRouter",
+    "RingBuffer", "Route", "StreamEngine", "Window", "WindowDispatcher",
+    "WindowResult", "WindowSpec", "bucket_size", "cough_pipeline",
+    "cough_window_op_counts", "energy_config_for_format", "rpeak_pipeline",
+    "rpeak_window_op_counts",
+]

@@ -1,0 +1,207 @@
+"""StreamEngine: continuous multi-patient windowed inference.
+
+Chunks from a fleet of simulated wearables flow in (any interleaving across
+patients; in-order within one stream).  Each patient's dispatcher emits
+fixed-size windows exactly once; the router groups ready windows by
+(task, format); the engine pads each group to a small set of batch buckets and
+runs the shared jit-compiled window function, so steady-state traffic hits a
+handful of compiled programs regardless of fleet size or arrival pattern.
+Per-dispatch wall-clock and per-window model energy land in the ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .accounting import EnergyLedger
+from .pipelines import Pipeline
+from .ring import Window, WindowDispatcher
+from .router import PrecisionRouter
+
+
+def bucket_size(n: int, max_batch: int) -> int:
+    """Smallest power of two ≥ n (capped): bounds jit recompilation to
+    log2(max_batch)+1 batch shapes per (task, format)."""
+    b = 1
+    while b < n and b < max_batch:
+        b *= 2
+    return min(b, max_batch)
+
+
+@dataclasses.dataclass
+class WindowResult:
+    """One window's inference output with full provenance."""
+
+    patient: str
+    task: str
+    widx: int
+    fmt: str
+    t0_s: float
+    outputs: Dict[str, np.ndarray]  # per-window slices of the batch outputs
+
+
+class StreamEngine:
+    def __init__(self, pipelines: Dict[str, Pipeline],
+                 router: Optional[PrecisionRouter] = None,
+                 max_batch: int = 64, pad_to_max: bool = False):
+        """``pad_to_max``: always pad dispatches to ``max_batch`` — exactly
+        one compiled batch shape per (task, format), the steady-state service
+        configuration. Default pow2 bucketing compiles more shapes but wastes
+        less compute on ragged tails."""
+        self.pipelines = dict(pipelines)
+        self.router = router or PrecisionRouter()
+        self.max_batch = int(max_batch)
+        self.pad_to_max = bool(pad_to_max)
+        self.ledger = EnergyLedger()
+        self.results: List[WindowResult] = []
+        self._dispatchers: Dict[Tuple[str, str], WindowDispatcher] = {}
+        self._pending: List[Window] = []
+        self._pending_counts: Dict[Tuple[str, str], int] = {}
+        self._fns: Dict[Tuple[str, str], object] = {}
+
+    # -- ingest ---------------------------------------------------------------
+    def register_patient(self, patient: str, task: str,
+                         fmt: Optional[str] = None) -> None:
+        key = (patient, task)
+        if key in self._dispatchers:
+            raise KeyError(f"{patient!r} already registered for {task!r}")
+        self._dispatchers[key] = WindowDispatcher(
+            patient, self.pipelines[task].spec)
+        if fmt is not None:
+            self.router.pin(patient, fmt)
+
+    def ingest(self, patient: str, task: str, modality: str,
+               chunk: np.ndarray) -> None:
+        """Feed one in-order chunk; dispatches automatically once a full
+        batch of windows is ready somewhere in the fleet."""
+        key = (patient, task)
+        if key not in self._dispatchers:
+            self.register_patient(patient, task)
+        for w in self._dispatchers[key].push(modality, chunk):
+            self._pending.append(w)
+            # auto-pump only when ONE (task, fmt) group can fill a batch —
+            # a fleet-total trigger would re-group the whole pending list on
+            # every ingest once many sparse groups accumulate
+            try:
+                gkey = (task, self.router.route(w.patient, task).fmt)
+            except Exception:
+                gkey = (task, "?")  # unroutable: error surfaces at pump()
+            cnt = self._pending_counts.get(gkey, 0) + 1
+            self._pending_counts[gkey] = cnt
+            if cnt >= self.max_batch:
+                self.pump(include_partial=False)
+
+    # -- dispatch -------------------------------------------------------------
+    def pump(self, include_partial: bool = True) -> int:
+        """Dispatch pending windows now; returns the number processed.
+
+        ``include_partial=False`` (the auto-pump mode) only dispatches groups
+        that fill a whole ``max_batch`` — ragged remainders stay pending for
+        a later pump/drain instead of burning a padded batch per trickle.
+        A failing dispatch re-queues every unprocessed window before the
+        exception propagates: one bad route never drops healthy streams.
+        """
+        pending, self._pending = self._pending, []
+        n = 0
+        # route per window: an unroutable window is retained (and its error
+        # surfaced below) without holding any other group hostage
+        groups: Dict[Tuple[str, str], List[Window]] = {}
+        first_err: Optional[BaseException] = None
+        for w in pending:
+            try:
+                key = (w.task, self.router.route(w.patient, w.task).fmt)
+            except Exception as e:
+                first_err = first_err or e
+                self._pending.append(w)
+                continue
+            groups.setdefault(key, []).append(w)
+        # a failing group re-queues its own tail; other groups still dispatch
+        for (task, fmt), ws in groups.items():
+            pos = 0
+            try:
+                while len(ws) - pos >= self.max_batch or (
+                        include_partial and pos < len(ws)):
+                    batch = ws[pos: pos + self.max_batch]
+                    self._dispatch(task, fmt, batch)
+                    pos += len(batch)
+                    n += len(batch)
+            except Exception as e:
+                first_err = first_err or e
+            self._pending.extend(ws[pos:])
+        self._recount_pending()
+        if first_err is not None:
+            raise first_err
+        return n
+
+    def _recount_pending(self) -> None:
+        self._pending_counts = {}
+        for w in self._pending:
+            try:
+                gkey = (w.task, self.router.route(w.patient, w.task).fmt)
+            except Exception:
+                gkey = (w.task, "?")
+            self._pending_counts[gkey] = self._pending_counts.get(gkey, 0) + 1
+
+    def drain(self) -> int:
+        """End-of-stream flush: dispatch everything still pending."""
+        return self.pump(include_partial=True)
+
+    def _fn(self, task: str, fmt: str):
+        key = (task, fmt)
+        if key not in self._fns:
+            self._fns[key] = self.pipelines[task].make_fn(fmt)
+        return self._fns[key]
+
+    def _dispatch(self, task: str, fmt: str, windows: List[Window]) -> None:
+        pipe = self.pipelines[task]
+        fn = self._fn(task, fmt)
+        B = len(windows)
+        Bpad = self.max_batch if self.pad_to_max \
+            else bucket_size(B, self.max_batch)
+        arrays: Dict[str, jax.Array] = {}
+        for m in pipe.spec.modalities:
+            stack = np.zeros((Bpad, m.channels, pipe.spec.window_samples(m)),
+                             np.float32)
+            for i, w in enumerate(windows):
+                stack[i] = w.arrays[m.name]
+            arrays[m.name] = jnp.asarray(stack)
+        t0 = time.perf_counter()
+        outs = fn(arrays)
+        outs = {k: np.asarray(jax.block_until_ready(v))
+                for k, v in outs.items()}
+        dt = time.perf_counter() - t0
+        self.ledger.record(task, fmt, B, Bpad - B, dt, pipe.ops_per_window)
+        for i, w in enumerate(windows):
+            self.results.append(WindowResult(
+                w.patient, task, w.widx, fmt, w.t0_s,
+                {k: v[i] for k, v in outs.items()}))
+
+    def reset(self) -> None:
+        """Fresh streams and metrics; compiled (task, format) functions are
+        kept so a benchmark can warm up, reset, then measure steady state."""
+        self._dispatchers.clear()
+        self._pending.clear()
+        self._pending_counts.clear()
+        self.results = []
+        self.ledger = EnergyLedger()
+
+    # -- reporting ------------------------------------------------------------
+    def fleet_summary(self) -> Dict[str, Dict[str, float]]:
+        return self.ledger.summary()
+
+    def results_for(self, patient: str, task: str) -> List[WindowResult]:
+        out = [r for r in self.results
+               if r.patient == patient and r.task == task]
+        return sorted(out, key=lambda r: r.widx)
+
+    def pop_results(self) -> List[WindowResult]:
+        """Consume-and-clear: long-running callers must drain results (and
+        forward them to storage/alerting) or ``results`` grows one entry per
+        window for the life of the stream."""
+        out, self.results = self.results, []
+        return out

@@ -1,0 +1,116 @@
+"""Format-parametrized window pipelines: one compiled function per
+(task, format), shared bit-for-bit with the offline evaluation paths.
+
+* cough  — ``apps.cough.make_cough_scorer`` (FFT→PSD→MFCC→spectral + IMU
+  features → random forest), batch over windows from many patients.
+* rpeak  — BayeSlope stages 1–2 (``apps.bayeslope.rpeak_window_scores``)
+  jit+vmap over windows, plus an in-format candidate-peak count per window
+  (the per-window heart-rate proxy the fleet monitor consumes).
+
+Each pipeline also states its per-window arithmetic op counts so the engine
+can put nJ/window numbers next to throughput (see ``stream.accounting``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.bayeslope import rpeak_window_scores
+from repro.apps.cough import make_cough_scorer
+from repro.apps.forest import Forest
+from repro.core.arith import Arith
+from repro.data.biosignals import AUDIO_SR, ECG_FS, IMU_SR, WINDOW_S
+from repro.energy.model import OpCounts
+
+from .accounting import cough_window_op_counts, rpeak_window_op_counts
+from .ring import ModalitySpec, WindowSpec
+
+RPEAK_WINDOW_S = 2.0
+
+COUGH_SPEC = WindowSpec(
+    task="cough",
+    modalities=(ModalitySpec("audio", 2, AUDIO_SR),
+                ModalitySpec("imu", 9, IMU_SR)),
+    window_s=WINDOW_S, hop_s=WINDOW_S)
+
+RPEAK_SPEC = WindowSpec(
+    task="rpeak",
+    modalities=(ModalitySpec("ecg", 1, ECG_FS),),
+    window_s=RPEAK_WINDOW_S, hop_s=RPEAK_WINDOW_S)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """One streaming task: its window grid, compiled-fn factory, op counts.
+
+    ``make_fn(fmt)`` returns a jit-compiled function mapping a dict of
+    batched modality arrays (each ``(B, channels, n)`` float32) to a dict of
+    batched outputs; rows are independent, so any batch size reuses the same
+    compiled code per bucket and padding rows never affect real rows.
+    """
+
+    name: str
+    spec: WindowSpec
+    make_fn: Callable[[str], Callable[[Dict[str, jax.Array]],
+                                      Dict[str, jax.Array]]]
+    ops_per_window: OpCounts
+
+
+def cough_pipeline(forest: Forest) -> Pipeline:
+    def make_fn(fmt: str):
+        scorer = make_cough_scorer(fmt, forest)
+
+        def fn(arrays: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+            # audio arrives at the full 300 ms window (4800 samples); the
+            # scorer itself crops/pads to the 4096-point FFT like the
+            # offline path.
+            return {"p_cough": scorer(arrays["audio"], arrays["imu"])}
+
+        return fn
+
+    # bill energy for the forest actually deployed, not the default size
+    ops = cough_window_op_counts(n_trees=forest.feat.shape[0],
+                                 depth=forest.depth)
+    return Pipeline("cough", COUGH_SPEC, make_fn, ops)
+
+
+def rpeak_pipeline(window_s: float = RPEAK_WINDOW_S,
+                   peak_threshold: float = 0.5,
+                   refractory_s: float = 0.1) -> Pipeline:
+    n = int(round(window_s * ECG_FS))
+    refr = max(int(round(refractory_s * ECG_FS)), 1)
+    spec = RPEAK_SPEC if window_s == RPEAK_WINDOW_S else WindowSpec(
+        task="rpeak", modalities=(ModalitySpec("ecg", 1, ECG_FS),),
+        window_s=window_s, hop_s=window_s)
+
+    def make_fn(fmt: str):
+        ar = Arith.make(fmt)
+
+        def one_window(sig: jax.Array) -> Dict[str, jax.Array]:
+            norm = rpeak_window_scores(ar, sig)
+            # candidate count: above threshold AND the maximum within the
+            # ±refractory neighbourhood (≥ towards the past, > towards the
+            # future — the same tie-break as the offline detector's greedy
+            # pass). A cheap per-window HR proxy, not the Bayesian stage.
+            is_peak = norm > peak_threshold
+            ones = jnp.ones((), jnp.bool_)
+            for d in range(1, refr + 1):
+                ge_past = jnp.concatenate(
+                    [jnp.broadcast_to(ones, (d,)), norm[d:] >= norm[:-d]])
+                gt_future = jnp.concatenate(
+                    [norm[:-d] > norm[d:], jnp.broadcast_to(ones, (d,))])
+                is_peak &= ge_past & gt_future
+            return {"scores": norm,
+                    "peak_count": jnp.sum(is_peak).astype(jnp.int32)}
+
+        @jax.jit
+        def fn(arrays: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+            sig = arrays["ecg"][:, 0, :]            # (B, n) single lead
+            return jax.vmap(one_window)(sig)
+
+        return fn
+
+    return Pipeline("rpeak", spec, make_fn, rpeak_window_op_counts(n))

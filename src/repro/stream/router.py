@@ -1,0 +1,62 @@
+"""PrecisionRouter: which arithmetic format serves which patient stream.
+
+The paper's per-application result (posit16 for cough, posit10 for R-peak) is
+a *routing table*, not a global constant: a fleet mixes tasks, and individual
+patients can be pinned to a different format (e.g. a clinician requests fp32
+for a high-risk patient, or an A/B arm runs posit8).  Same-format windows are
+grouped into one dispatch so the engine compiles one function per
+(task, format) pair and batches across patients.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.policy import (QuantPolicy, STREAM_TASK_FORMATS,
+                               wearable_policy)
+
+from .ring import Window
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """Resolved precision assignment for one patient stream."""
+
+    fmt: str
+    policy: QuantPolicy
+
+
+class PrecisionRouter:
+    def __init__(self,
+                 task_formats: Optional[Dict[str, str]] = None,
+                 patient_formats: Optional[Dict[str, str]] = None):
+        """``task_formats``: per-task default (falls back to the paper table);
+        ``patient_formats``: per-patient override, highest priority."""
+        self.task_formats = dict(STREAM_TASK_FORMATS)
+        if task_formats:
+            self.task_formats.update(task_formats)
+        self.patient_formats = dict(patient_formats or {})
+
+    def pin(self, patient: str, fmt: str) -> None:
+        """Pin one patient to a format (takes effect at the next dispatch)."""
+        self.patient_formats[patient] = fmt
+
+    def route(self, patient: str, task: str) -> Route:
+        fmt = self.patient_formats.get(patient) or self.task_formats.get(task)
+        if fmt is None:
+            raise KeyError(f"no format routed for task {task!r} "
+                           f"(patient {patient!r})")
+        return Route(fmt, wearable_policy(fmt))
+
+    def group(self, windows: Iterable[Window]
+              ) -> Dict[Tuple[str, str], List[Window]]:
+        """Group ready windows into dispatch batches keyed (task, fmt).
+
+        Order within a group preserves arrival order, so per-patient window
+        order survives batching.
+        """
+        groups: Dict[Tuple[str, str], List[Window]] = {}
+        for w in windows:
+            key = (w.task, self.route(w.patient, w.task).fmt)
+            groups.setdefault(key, []).append(w)
+        return groups

@@ -4,3 +4,11 @@ import sys
 # Tests and benches must see exactly ONE device (the dry-run sets its own
 # 512-device XLA_FLAGS in a subprocess); never set that flag here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests use `hypothesis` when available; the fleet containers don't
+# ship it, so fall back to the deterministic mini-implementation.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro import hypothesis_mini
+    sys.modules["hypothesis"] = hypothesis_mini

@@ -9,12 +9,11 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import make_mesh, shard_map
     from repro.core.formats import POSIT16
     from repro.distributed.collectives import posit_all_reduce, posit_all_reduce_ef
 
-    mesh = jax.make_mesh((8,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("pod",))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
 

@@ -1,0 +1,53 @@
+"""energy/model.py vs the paper's §VI numbers, and the streaming op-count
+extensions layered on top of it."""
+import pytest
+
+from repro.energy import model as em
+from repro.stream.accounting import (cough_window_op_counts,
+                                     energy_config_for_format,
+                                     rpeak_window_op_counts)
+
+
+def test_fft_energy_reproduces_paper_measurements():
+    # §VI-B: 404.2 / 554.2 / 501.6 nJ within 1%
+    assert em.fft_energy_nj("coprosit") == pytest.approx(404.2, rel=0.01)
+    assert em.fft_energy_nj("fpu_ss") == pytest.approx(554.2, rel=0.01)
+    assert em.fft_energy_nj("fpu_ss_nonasm") == pytest.approx(501.6, rel=0.01)
+
+
+def test_area_and_unit_power_savings():
+    assert em.area_saving_fraction() == pytest.approx(0.38, abs=0.01)
+    assert em.unit_power_saving_fraction() == pytest.approx(0.423, abs=0.005)
+
+
+def test_fft_op_counts_structure():
+    ops = em.fft_op_counts(4096)
+    bf = (4096 // 2) * 12
+    assert ops.add == 6 * bf and ops.mul == 4 * bf
+    assert ops.total() == 10 * bf
+
+
+def test_estimate_app_energy_scales_with_ops_and_corner():
+    small = em.OpCounts(add=1000, mul=1000)
+    large = em.OpCounts(add=2000, mul=2000)
+    e_small = em.estimate_app_energy_nj(small, "coprosit")
+    e_large = em.estimate_app_energy_nj(large, "coprosit")
+    assert e_large == pytest.approx(2 * e_small, rel=1e-9)
+    # same work on the IEEE corner costs more (Table IV total power)
+    assert em.estimate_app_energy_nj(small, "fpu_ss") > e_small
+
+
+def test_stream_window_op_counts_sane():
+    cough = cough_window_op_counts()
+    # FFT of both mics dominates the cough window
+    assert cough.total() > 2 * em.fft_op_counts(4096).total()
+    e_cough = em.estimate_app_energy_nj(cough, "coprosit")
+    # a cough window costs at least the two measured FFT-4096 runs and stays
+    # the same order of magnitude
+    assert 2 * 0.6 * 404.2 < e_cough < 10 * 404.2
+    rpeak = rpeak_window_op_counts(500)
+    e_rpeak = em.estimate_app_energy_nj(rpeak, "coprosit")
+    # the ECG window is orders of magnitude cheaper than the audio window
+    assert e_rpeak < e_cough / 10
+    assert energy_config_for_format("posit10") == "coprosit"
+    assert energy_config_for_format("bfloat16") == "fpu_ss"

@@ -15,8 +15,8 @@ ARCHS = sorted(CONFIGS)
 
 
 def tiny_minfo():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     return MeshInfo(mesh, dp_axes=("data",))
 
 

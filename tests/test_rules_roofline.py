@@ -16,9 +16,8 @@ from repro.roofline.analysis import collective_bytes, roofline_terms
 
 def minfo_2x4():
     # AbstractMesh: spec-level tests need axis sizes, not 8 real devices
-    mesh = jax.sharding.AbstractMesh(
-        (2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import abstract_mesh
+    mesh = abstract_mesh((2, 4), ("data", "model"))
     return MeshInfo(mesh, dp_axes=("data",))
 
 

@@ -1,0 +1,287 @@
+"""Streaming runtime: exactly-once windowing under ragged arrival, and
+bit-identity of streamed windows vs the equivalent offline batch path."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.apps.bayeslope import rpeak_window_scores
+from repro.apps.cough import make_cough_scorer, train_reference_forest
+from repro.core.arith import Arith
+from repro.data.biosignals import (cough_stream_signals, ecg_stream_signal,
+                                   ragged_chunks)
+from repro.stream import (COUGH_SPEC, PrecisionRouter, RingBuffer,
+                          StreamEngine, WindowDispatcher, bucket_size,
+                          cough_pipeline, energy_config_for_format,
+                          rpeak_pipeline)
+from repro.stream.accounting import EnergyLedger, cough_window_op_counts
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer
+# ---------------------------------------------------------------------------
+def test_ring_buffer_wraparound_absolute_reads():
+    rng = np.random.default_rng(0)
+    ref = rng.normal(size=(3, 1000))
+    ring = RingBuffer(3, capacity=64)
+    pos = 0
+    for k in (5, 17, 1, 40, 64, 23, 60):
+        if pos + k > ref.shape[-1]:
+            break
+        ring.push(ref[:, pos: pos + k])
+        pos += k
+        # any in-capacity absolute range must read back exactly
+        lo = max(0, pos - 64)
+        start = int(rng.integers(lo, pos))
+        length = int(rng.integers(1, pos - start + 1))
+        np.testing.assert_array_equal(ring.read(start, length),
+                                      ref[:, start: start + length])
+
+
+def test_ring_buffer_rejects_stale_and_future_reads():
+    ring = RingBuffer(1, capacity=10)
+    ring.push(np.arange(10, dtype=np.float64)[None, :])
+    ring.push(np.arange(10, 20, dtype=np.float64)[None, :])
+    with pytest.raises(IndexError):
+        ring.read(0, 5)       # overwritten
+    with pytest.raises(IndexError):
+        ring.read(15, 10)     # not yet ingested
+    with pytest.raises(ValueError):
+        ring.push(np.zeros((1, 11)))  # larger than capacity
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher: exactly-once, in-order, content-exact, ragged chunks
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dispatcher_exactly_once_ragged_multimodal(seed):
+    rng = np.random.default_rng(seed)
+    n_windows = 5
+    audio, imu, _ = cough_stream_signals(n_windows, seed=seed + 50)
+    d = WindowDispatcher("p0", COUGH_SPEC)
+    # ragged chunks, modality arrival skewed: all imu may land before audio
+    a_chunks = list(ragged_chunks(audio, rng, 100, 7000))
+    i_chunks = list(ragged_chunks(imu, rng, 2, 40))
+    got = []
+    while a_chunks or i_chunks:
+        pick_audio = a_chunks and (not i_chunks or rng.uniform() < 0.5)
+        if pick_audio:
+            got.extend(d.push("audio", a_chunks.pop(0)))
+        else:
+            got.extend(d.push("imu", i_chunks.pop(0)))
+    # exactly once, in order, nothing dropped
+    assert [w.widx for w in got] == list(range(n_windows))
+    # content identical to direct slices of the source signal
+    for w in got:
+        a0 = w.widx * 4800
+        i0 = w.widx * 30
+        np.testing.assert_array_equal(
+            w.arrays["audio"], audio[:, a0: a0 + 4800].astype(np.float32))
+        np.testing.assert_array_equal(
+            w.arrays["imu"], imu[:, i0: i0 + 30].astype(np.float32))
+
+
+def test_dispatcher_huge_chunk_exceeding_ring_capacity():
+    n_windows = 6
+    audio, imu, _ = cough_stream_signals(n_windows, seed=3)
+    d = WindowDispatcher("p0", COUGH_SPEC)
+    got = d.push("audio", audio)      # whole recording in one push
+    assert got == []                  # imu not yet arrived
+    got = d.push("imu", imu)
+    assert [w.widx for w in got] == list(range(n_windows))
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+def test_router_paper_defaults_and_pinning():
+    r = PrecisionRouter()
+    assert r.route("anyone", "cough").fmt == "posit16"
+    assert r.route("anyone", "rpeak").fmt == "posit10"
+    assert r.route("anyone", "cough").policy.weights == "posit16"
+    r.pin("p7", "fp32")
+    assert r.route("p7", "cough").fmt == "fp32"
+    assert not r.route("p7", "cough").policy.any_quantized
+    with pytest.raises(KeyError):
+        r.route("p0", "unknown-task")
+
+
+def test_bucket_size_and_energy_config():
+    assert [bucket_size(n, 64) for n in (1, 2, 3, 5, 33, 64, 200)] == \
+        [1, 2, 4, 8, 64, 64, 64]
+    assert energy_config_for_format("posit16") == "coprosit"
+    assert energy_config_for_format("fp16") == "fpu_ss"
+
+
+def test_energy_ledger_accounting():
+    led = EnergyLedger()
+    ops = cough_window_op_counts()
+    led.record("cough", "posit16", 4, 0, 0.5, ops)
+    led.record("cough", "posit16", 2, 2, 0.5, ops)
+    led.record("cough", "fp16", 4, 0, 1.0, ops)
+    s = led.summary()
+    g = s["cough/posit16"]
+    assert g["windows"] == 6 and g["batches"] == 2 and g["padded_windows"] == 2
+    assert g["windows_per_s"] == pytest.approx(6.0)
+    # same op counts: the IEEE corner burns more power per window (Table IV)
+    assert s["cough/fp16"]["nj_per_window"] > g["nj_per_window"]
+    assert s["fleet"]["windows"] == 10
+    assert s["fleet"]["total_nj"] == pytest.approx(
+        g["total_nj"] + s["cough/fp16"]["total_nj"])
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end: streamed outputs ≡ offline batch, across arrival orders
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def forest():
+    return train_reference_forest(48, 123, n_trees=5, depth=4)
+
+
+def _run_fleet(forest, arrival_seed, n_cough=3, n_ecg=2, n_windows=3,
+               max_batch=4):
+    """Feed a small mixed fleet in a random interleave; return the engine
+    plus the per-patient source signals."""
+    eng = StreamEngine({"cough": cough_pipeline(forest),
+                        "rpeak": rpeak_pipeline()}, max_batch=max_batch)
+    rng = np.random.default_rng(arrival_seed)
+    sources = {}
+    queues = []
+    for p in range(n_cough):
+        a, i, _ = cough_stream_signals(n_windows, seed=p)
+        sources[f"c{p}"] = (a, i)
+        queues.append((f"c{p}", "cough", "audio",
+                       list(ragged_chunks(a, rng, 200, 6000))))
+        queues.append((f"c{p}", "cough", "imu",
+                       list(ragged_chunks(i, rng, 2, 20))))
+    for p in range(n_ecg):
+        s, _ = ecg_stream_signal(n_windows * 2.0, seed=100 + p)
+        sources[f"e{p}"] = s
+        queues.append((f"e{p}", "rpeak", "ecg",
+                       list(ragged_chunks(s[None, :], rng, 30, 700))))
+    while any(q[3] for q in queues):
+        k = int(rng.integers(len(queues)))
+        pid, task, mod, chunks = queues[k]
+        if chunks:
+            eng.ingest(pid, task, mod, chunks.pop(0))
+    eng.drain()
+    return eng, sources
+
+
+def test_stream_bit_identical_to_offline_and_arrival_invariant(forest):
+    n_windows = 3
+    scorer = make_cough_scorer("posit16", forest)
+    ar10 = Arith.make("posit10")
+    runs = []
+    for arrival_seed in (0, 7):
+        eng, sources = _run_fleet(forest, arrival_seed, n_windows=n_windows)
+        # no window dropped or duplicated, per patient, in order
+        for p in range(3):
+            rs = eng.results_for(f"c{p}", "cough")
+            assert [r.widx for r in rs] == list(range(n_windows))
+            a, i = sources[f"c{p}"]
+            aw = jnp.asarray(a.reshape(2, n_windows, 4800).transpose(1, 0, 2),
+                             jnp.float32)
+            iw = jnp.asarray(i.reshape(9, n_windows, 30).transpose(1, 0, 2),
+                             jnp.float32)
+            offline = np.asarray(scorer(aw, iw))
+            got = np.asarray([r.outputs["p_cough"] for r in rs])
+            np.testing.assert_array_equal(got, offline)  # bit-identical
+            assert all(r.fmt == "posit16" for r in rs)
+        for p in range(2):
+            rs = eng.results_for(f"e{p}", "rpeak")
+            assert [r.widx for r in rs] == list(range(n_windows))
+            s = sources[f"e{p}"]
+            wb = jnp.asarray(s[: n_windows * 500].reshape(n_windows, 500),
+                             jnp.float32)
+            offline = np.asarray(rpeak_window_scores(ar10, wb))
+            got = np.asarray([r.outputs["scores"] for r in rs])
+            np.testing.assert_array_equal(got, offline)  # bit-identical
+        runs.append(sorted(
+            ((r.patient, r.task, r.widx,
+              float(np.sum(r.outputs[next(iter(r.outputs))])))
+             for r in eng.results)))
+    # outputs independent of arrival interleaving
+    assert runs[0] == runs[1]
+
+
+def test_engine_auto_pump_and_summary(forest):
+    eng, _ = _run_fleet(forest, arrival_seed=3, max_batch=2)
+    s = eng.fleet_summary()
+    assert s["fleet"]["windows"] == 3 * 3 + 2 * 3
+    assert s["cough/posit16"]["windows"] == 9
+    assert s["rpeak/posit10"]["windows"] == 6
+    assert s["cough/posit16"]["nj_per_window"] > 0
+    assert s["fleet"]["windows_per_s"] > 0
+    # auto-pump with max_batch=2 must have dispatched before drain()
+    assert s["cough/posit16"]["batches"] >= 4
+
+
+def test_ecg_stream_signal_exact_length():
+    # per-phase flooring must not eat trailing windows (8 s / 3 phases)
+    for n_phases in (1, 3, 4, 7):
+        sig, r = ecg_stream_signal(8.0, seed=1, n_phases=n_phases)
+        assert len(sig) == 2000, n_phases
+        assert r.max() < 2000
+
+
+def test_pump_requeues_windows_when_dispatch_fails(forest):
+    eng = StreamEngine({"cough": cough_pipeline(forest)}, max_batch=4)
+    a, i, _ = cough_stream_signals(2, seed=11)
+    eng.register_patient("bad", "cough", fmt="fp7-no-such-format")
+    eng.ingest("bad", "cough", "audio", a)
+    eng.ingest("bad", "cough", "imu", i)
+    with pytest.raises(KeyError):
+        eng.drain()
+    # nothing lost: re-route the patient and the same windows dispatch
+    eng.router.pin("bad", "posit16")
+    assert eng.drain() == 2
+    assert [r.widx for r in eng.results_for("bad", "cough")] == [0, 1]
+
+
+def test_unroutable_window_does_not_block_other_groups(forest):
+    import dataclasses
+
+    from repro.stream import Pipeline, rpeak_pipeline
+    rp = rpeak_pipeline()
+    custom = Pipeline("hrx", dataclasses.replace(rp.spec, task="hrx"),
+                      rp.make_fn, rp.ops_per_window)
+    eng = StreamEngine({"cough": cough_pipeline(forest), "hrx": custom},
+                       max_batch=4)
+    s, _ = ecg_stream_signal(2.0, seed=5)
+    eng.ingest("e0", "hrx", "ecg", s[None, :])  # task with no routed format
+    a, i, _ = cough_stream_signals(1, seed=13)
+    eng.ingest("c0", "cough", "audio", a)
+    eng.ingest("c0", "cough", "imu", i)
+    with pytest.raises(KeyError):
+        eng.drain()
+    # the healthy stream dispatched despite the poison window...
+    assert [r.widx for r in eng.results_for("c0", "cough")] == [0]
+    # ...and the poison window is retained, not dropped: route it and drain
+    eng.router.pin("e0", "posit10")
+    assert eng.drain() == 1
+    assert [r.widx for r in eng.results_for("e0", "hrx")] == [0]
+
+
+def test_auto_pump_keeps_ragged_remainders_pending(forest):
+    eng = StreamEngine({"cough": cough_pipeline(forest)}, max_batch=2)
+    a, i, _ = cough_stream_signals(3, seed=12)
+    eng.ingest("p", "cough", "audio", a)
+    eng.ingest("p", "cough", "imu", i)   # 3 ready: auto-pump fires (≥2)...
+    assert len(eng.results) == 2         # ...but only the full batch runs
+    assert eng.drain() == 1              # the remainder waits for drain
+    assert [r.widx for r in eng.results_for("p", "cough")] == [0, 1, 2]
+
+
+def test_engine_per_patient_format_override(forest):
+    eng = StreamEngine({"cough": cough_pipeline(forest)}, max_batch=4)
+    a, i, _ = cough_stream_signals(2, seed=9)
+    eng.register_patient("risky", "cough", fmt="fp32")
+    eng.ingest("risky", "cough", "audio", a)
+    eng.ingest("risky", "cough", "imu", i)
+    eng.ingest("std", "cough", "audio", a)
+    eng.ingest("std", "cough", "imu", i)
+    eng.drain()
+    assert {r.fmt for r in eng.results_for("risky", "cough")} == {"fp32"}
+    assert {r.fmt for r in eng.results_for("std", "cough")} == {"posit16"}
+    s = eng.fleet_summary()
+    assert "cough/fp32" in s and "cough/posit16" in s
