@@ -5,11 +5,16 @@ per-format throughput (windows/sec) and model energy (nJ/window).
   python benchmarks/stream_bench.py              # 64 patients, warmed run
   python benchmarks/stream_bench.py --smoke      # CI-sized single pass
   python benchmarks/stream_bench.py --patients 128 --windows 10
+  python benchmarks/stream_bench.py --json       # + BENCH_stream.json
 
 Output follows benchmarks/run.py conventions: ``name,us_per_call,derived``
-CSV rows, one per (task, format) group plus a fleet rollup.
+CSV rows, one per (task, format) group plus a fleet rollup.  ``--json``
+additionally writes a machine-readable ``BENCH_stream.json`` (windows/sec,
+µs/window, nJ/window per task×format) so the perf trajectory is tracked
+across PRs.
 """
 import argparse
+import json
 import os
 import sys
 import time
@@ -80,6 +85,10 @@ def main():
                     help="CI-sized defaults + no warmup pass")
     ap.add_argument("--homogeneous", action="store_true",
                     help="paper-table formats only (no fp16/posit8 arms)")
+    ap.add_argument("--json", nargs="?", const="BENCH_stream.json",
+                    default=None, metavar="PATH",
+                    help="also write machine-readable results (default "
+                         "PATH: BENCH_stream.json)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     smoke_d, full_d = (8, 2, 8), (64, 4, 32)
@@ -122,8 +131,10 @@ def main():
     n = len(engine.results)
     expect = args.patients * args.windows  # every patient emits each window
     assert n == expect, f"windows processed {n} != expected {expect}"
+    groups = {}
     for key, row in engine.fleet_summary().items():
         us = 1e6 / row["windows_per_s"] if row["windows_per_s"] else 0.0
+        groups[key] = {"us_per_window": us, **row}
         print(f"stream_bench/{key},{us:.0f},"
               f"windows={row['windows']};"
               f"windows_per_s={row['windows_per_s']:.1f};"
@@ -131,6 +142,24 @@ def main():
     print(f"stream_bench/wall,0,patients={args.patients};"
           f"windows={n};elapsed_s={wall:.2f};"
           f"end_to_end_windows_per_s={n / wall:.1f}")
+    if args.json:
+        import jax
+        from repro.core.arith import get_round_backend
+        doc = {
+            "benchmark": "stream_bench",
+            "config": {"patients": args.patients, "windows": args.windows,
+                       "max_batch": args.max_batch, "smoke": args.smoke,
+                       "homogeneous": args.homogeneous, "seed": args.seed,
+                       "backend": jax.default_backend(),
+                       "round_backend": get_round_backend()},
+            "groups": groups,
+            "wall": {"elapsed_s": wall, "windows": n,
+                     "end_to_end_windows_per_s": n / wall},
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -4,10 +4,38 @@ MFCC — every arithmetic op rounded to the chosen format through ``Arith``
 
 The FFT here is the paper's §VI-B energy kernel: 4096-point, the hot spot of
 the cough-detection application (~50% of runtime).
+
+All per-call table construction (bit-reversal permutation, per-stage
+twiddles, mel filterbank, DCT basis) is cached in an :class:`FFTPlan` /
+table cache keyed on (size, format, dtype): tables are pre-rounded through
+the target format once and embedded as trace-time constants, so re-tracing
+a pipeline no longer rebuilds them in Python nor re-traces a rounding chain
+per table per compile.
+
+Exact butterfly identities (used by ``rfft_format`` to skip provably
+redundant rounded work while staying bit-identical to the naive all-ops
+path):
+
+* rounding is idempotent — ``rnd`` maps a float to lattice bits with every
+  sub-LSB bit cleared, so a second ``rnd`` at the same scale is a no-op;
+* for a real input the stage-1 twiddle is (1, ±0) and the imaginary plane
+  is exactly zero, so ``t = w ⊗ o`` collapses to ``t = o`` and stage 1 is
+  a pure real add/sub butterfly; stage 2 collapses to
+  ``t = (wr·o_re, wi·o_re)`` with ``u_im/v_im = ±t_im``
+  (``rnd(-x) = -rnd(x)``: both lattices are symmetric under negation);
+* a real input's power spectrum reads only bins 0..n/2, and those depend
+  on every butterfly except the final stage's v[1:] outputs.
+
+The stage-1/2 collapses are applied only for posit formats: posits cannot
+produce ±Inf, so finite inputs keep every intermediate finite and the
+identities hold unconditionally, whereas IEEE formats overflow mid-FFT and
+the naive path's ``(-0)·(±Inf) = NaN`` poisoning must be reproduced with
+honest butterflies.  The final-stage pruning is exact for every format.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,56 +44,205 @@ import numpy as np
 from repro.core.arith import Arith
 
 
+# ---------------------------------------------------------------------------
+# FFT plan cache
+# ---------------------------------------------------------------------------
+
+class FFTPlan:
+    """Cached tables for one (n, format, dtype) FFT.
+
+    ``stages[s]`` holds the stage-(s+1) twiddle factors ``(wr, wi)`` as
+    numpy constants pre-rounded through the target format — identical
+    values to rounding ``cos/sin`` on every call, without the per-trace
+    rounding chains.  No bit-reversal table: the stage loops below use
+    the self-sorting Stockham layout and never permute.
+    """
+
+    def __init__(self, n: int, fmt_name: str, dtype_name: str):
+        assert n & (n - 1) == 0, "power-of-two FFT"
+        self.n = n
+        self.levels = n.bit_length() - 1
+        ar = Arith.make(fmt_name)
+        dt = jnp.dtype(dtype_name)
+        self.stages: List[Tuple[np.ndarray, np.ndarray]] = []
+        # plans are built lazily on first use, which may be inside a jit
+        # trace — escape it so the tables materialize as real constants
+        with jax.ensure_compile_time_eval():
+            for s in range(1, self.levels + 1):
+                m = 1 << s
+                half = m // 2
+                ang = -2.0 * np.pi * np.arange(half) / m
+                wr = np.asarray(ar.rnd(jnp.asarray(np.cos(ang), dt)))
+                wi = np.asarray(ar.rnd(jnp.asarray(np.sin(ang), dt)))
+                self.stages.append((wr, wi))
+
+
+@functools.lru_cache(maxsize=None)
+def get_fft_plan(n: int, fmt_name: str, dtype_name: str) -> FFTPlan:
+    return FFTPlan(n, fmt_name, dtype_name)
+
+
+def _butterfly(ar: Arith, e_re, e_im, o_re, o_im, wr, wi):
+    """t = w ⊗ o (4 mul + 2 add, each rounded); u = e + t; v = e − t."""
+    t_re = ar.sub(ar.mul(wr, o_re), ar.mul(wi, o_im))
+    t_im = ar.add(ar.mul(wr, o_im), ar.mul(wi, o_re))
+    u_re = ar.add(e_re, t_re)
+    u_im = ar.add(e_im, t_im)
+    v_re = ar.sub(e_re, t_re)
+    v_im = ar.sub(e_im, t_im)
+    return u_re, u_im, v_re, v_im
+
+
+# Stockham stage layout.  State is (..., L, R) "transposed" early and
+# (..., R, L) "natural" late, where L is the sub-DFT length completed so
+# far and R = n / L; row r of the natural layout holds DFT_L of the
+# stride-R subsequence of the input starting at r.  Both layouts split
+# butterfly partners and write u/v as CONTIGUOUS blocks — unlike the
+# classic in-place DIT indexing, whose per-stage group reshuffles cost
+# more than the butterfly arithmetic itself on CPU.  The one
+# transposed→natural switch (a single transpose per FFT) happens when the
+# transposed split runs would drop below _MIN_RUN elements; after it the
+# natural joins have runs of L ≥ _MIN_RUN.
+_MIN_RUN = 64
+
+
+def _stage_split(z_re, z_im, R: int, transposed: bool):
+    if transposed:  # (..., L, R): partners along the last axis
+        return (z_re[..., : R // 2], z_im[..., : R // 2],
+                z_re[..., R // 2:], z_im[..., R // 2:])
+    # natural (..., R, L): partners along the row axis
+    return (z_re[..., : R // 2, :], z_im[..., : R // 2, :],
+            z_re[..., R // 2:, :], z_im[..., R // 2:, :])
+
+
+def _stage_join(u, v, transposed: bool):
+    return jnp.concatenate([u, v], axis=-2 if transposed else -1)
+
+
+def _stage_tw(w_np: np.ndarray, transposed: bool) -> jax.Array:
+    w = jnp.asarray(w_np)
+    return w[:, None] if transposed else w
+
+
+def _to_natural(z_re, z_im, transposed: bool):
+    if transposed:
+        return jnp.swapaxes(z_re, -1, -2), jnp.swapaxes(z_im, -1, -2)
+    return z_re, z_im
+
+
 def fft_format(ar: Arith, re: jax.Array, im: jax.Array
                ) -> Tuple[jax.Array, jax.Array]:
-    """Iterative radix-2 DIT FFT over the last axis, every op rounded.
+    """Iterative radix-2 FFT over the last axis, every op rounded.
 
     Twiddles are stored in the target format (table-based, as on PHEE).
+    Self-sorting Stockham stage layout: the same butterflies on the same
+    operand values as the classic bit-reversed DIT (bit-identical output),
+    with no input permutation and contiguous stage splits/joins.
     """
     n = re.shape[-1]
-    assert n & (n - 1) == 0, "power-of-two FFT"
-    levels = int(np.log2(n))
+    plan = get_fft_plan(n, ar.name, str(re.dtype))
+    zr = ar.rnd(re)[..., None, :]          # transposed start: (..., L=1, n)
+    zi = ar.rnd(im)[..., None, :]
+    tr = True
+    for t, (wr_np, wi_np) in enumerate(plan.stages):
+        R = n >> t
+        if tr and R // 2 < _MIN_RUN:
+            zr, zi = _to_natural(zr, zi, tr)
+            tr = False
+        wr, wi = _stage_tw(wr_np, tr), _stage_tw(wi_np, tr)
+        e_re, e_im, o_re, o_im = _stage_split(zr, zi, R, tr)
+        u_re, u_im, v_re, v_im = _butterfly(ar, e_re, e_im, o_re, o_im,
+                                            wr, wi)
+        zr = _stage_join(u_re, v_re, tr)
+        zi = _stage_join(u_im, v_im, tr)
+    zr, zi = _to_natural(zr, zi, tr)       # (..., 1, n) either way
+    return (zr.reshape(*zr.shape[:-2], n), zi.reshape(*zi.shape[:-2], n))
 
-    # bit reversal permutation (pure indexing, exact)
-    idx = np.arange(n)
-    rev = np.zeros(n, dtype=np.int64)
-    for i in range(n):
-        b = 0
-        x = i
-        for _ in range(levels):
-            b = (b << 1) | (x & 1)
-            x >>= 1
-        rev[i] = b
-    re = ar.rnd(re[..., rev])
-    im = ar.rnd(im[..., rev])
 
-    for s in range(1, levels + 1):
-        m = 1 << s
-        half = m // 2
-        ang = -2.0 * np.pi * np.arange(half) / m
-        wr = ar.rnd(jnp.asarray(np.cos(ang), re.dtype))
-        wi = ar.rnd(jnp.asarray(np.sin(ang), re.dtype))
-        x_re = re.reshape(*re.shape[:-1], n // m, m)
-        x_im = im.reshape(*im.shape[:-1], n // m, m)
-        e_re, o_re = x_re[..., :half], x_re[..., half:]
-        e_im, o_im = x_im[..., :half], x_im[..., half:]
-        # t = w * odd   (complex mul: 4 mul + 2 add, each rounded)
-        t_re = ar.sub(ar.mul(wr, o_re), ar.mul(wi, o_im))
-        t_im = ar.add(ar.mul(wr, o_im), ar.mul(wi, o_re))
-        u_re = ar.add(e_re, t_re)
-        u_im = ar.add(e_im, t_im)
-        v_re = ar.sub(e_re, t_re)
-        v_im = ar.sub(e_im, t_im)
-        re = jnp.concatenate([u_re, v_re], axis=-1).reshape(*re.shape[:-1], n)
-        im = jnp.concatenate([u_im, v_im], axis=-1).reshape(*im.shape[:-1], n)
-    return re, im
+def rfft_format(ar: Arith, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """FFT of a real last axis, returning only bins 0 .. n/2 (re, im).
+
+    Bit-identical to ``fft_format(ar, x, 0)[..., :n//2+1]`` — the same
+    rounded ops at every kept index (see module docstring for the exact
+    identities) — while never materializing the imaginary plane before
+    stage 2 and skipping the negative-frequency outputs of the final
+    stage, which the power spectrum of a real signal never reads.
+
+    The identity is unconditional for IEEE formats; for posit formats it
+    assumes the input is NaR-free (any finite real window — posit
+    rounding of a finite float is always finite).  A NaN sample would
+    poison both planes in the naive path but only the real plane here.
+    """
+    n = x.shape[-1]
+    plan = get_fft_plan(n, ar.name, str(x.dtype))
+    if plan.levels < 3:  # tiny sizes: no stages left to prune
+        re, im = fft_format(ar, x, jnp.zeros_like(x))
+        return re[..., : n // 2 + 1], im[..., : n // 2 + 1]
+    zr = ar.rnd(x)[..., None, :]           # transposed start: (..., 1, n)
+    tr = True
+
+    if ar.is_posit:
+        # Posits have no ±Inf and saturate instead of overflowing, so a
+        # finite real input keeps every intermediate finite and the exact
+        # stage collapses below hold unconditionally (a NaR input would
+        # poison only the real plane here but both planes in the naive
+        # path — real sensor windows are finite).
+        # stage 1: w = (1, +0) → t = o; pure real add/sub butterfly,
+        # imaginary plane stays exactly zero
+        e_re, o_re = zr[..., : n // 2], zr[..., n // 2:]
+        zr = _stage_join(ar.add(e_re, o_re), ar.sub(e_re, o_re), tr)
+        # stage 2: im-plane inputs are zero → t = (wr·o_re, wi·o_re),
+        # u_im = t_im, v_im = -t_im (both lattices negate exactly)
+        R = n >> 1
+        wr = _stage_tw(plan.stages[1][0], tr)
+        wi = _stage_tw(plan.stages[1][1], tr)
+        e_re, o_re = zr[..., : R // 2], zr[..., R // 2:]
+        t_re = ar.mul(wr, o_re)
+        t_im = ar.mul(wi, o_re)
+        zr = _stage_join(ar.add(e_re, t_re), ar.sub(e_re, t_re), tr)
+        zi = _stage_join(t_im, -t_im, tr)
+        start = 2
+    else:
+        # IEEE formats overflow to ±Inf (or NaN) mid-FFT, and the naive
+        # path's (-0)·(±Inf) = NaN poisoning must be reproduced exactly:
+        # run the honest butterflies on an explicit zero imaginary plane.
+        zi = jnp.zeros_like(zr)
+        start = 0
+
+    for t in range(start, plan.levels - 1):
+        R = n >> t
+        if tr and R // 2 < _MIN_RUN:
+            zr, zi = _to_natural(zr, zi, tr)
+            tr = False
+        wr_np, wi_np = plan.stages[t]
+        wr, wi = _stage_tw(wr_np, tr), _stage_tw(wi_np, tr)
+        e_re, e_im, o_re, o_im = _stage_split(zr, zi, R, tr)
+        u_re, u_im, v_re, v_im = _butterfly(ar, e_re, e_im, o_re, o_im,
+                                            wr, wi)
+        zr = _stage_join(u_re, v_re, tr)
+        zi = _stage_join(u_im, v_im, tr)
+
+    # final stage (R = 2, natural layout): only u (bins 0..n/2-1) and
+    # v[0] (the Nyquist bin) are non-redundant for a real input — v[1:]
+    # is never computed
+    zr, zi = _to_natural(zr, zi, tr)
+    wr_np, wi_np = plan.stages[-1]
+    wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
+    e_re, o_re = zr[..., 0, :], zr[..., 1, :]
+    e_im, o_im = zi[..., 0, :], zi[..., 1, :]
+    t_re = ar.sub(ar.mul(wr, o_re), ar.mul(wi, o_im))
+    t_im = ar.add(ar.mul(wr, o_im), ar.mul(wi, o_re))
+    u_re = ar.add(e_re, t_re)
+    u_im = ar.add(e_im, t_im)
+    ny_re = ar.sub(e_re[..., :1], t_re[..., :1])
+    ny_im = ar.sub(e_im[..., :1], t_im[..., :1])
+    return (jnp.concatenate([u_re, ny_re], axis=-1),
+            jnp.concatenate([u_im, ny_im], axis=-1))
 
 
 def power_spectrum(ar: Arith, x: jax.Array) -> jax.Array:
-    """|FFT|² of a real signal (first N/2+1 bins)."""
-    re, im = fft_format(ar, x, jnp.zeros_like(x))
-    n = x.shape[-1]
-    re, im = re[..., : n // 2 + 1], im[..., : n // 2 + 1]
+    """|FFT|² of a real signal (first N/2+1 bins, via the rfft split)."""
+    re, im = rfft_format(ar, x)
     return ar.add(ar.mul(re, re), ar.mul(im, im))
 
 
@@ -76,8 +253,11 @@ def spectral_features(ar: Arith, psd: jax.Array, sr: float) -> jax.Array:
     total = ar.sum(psd, axis=-1)
     total = jnp.maximum(total, 1e-20)
     centroid = ar.div(ar.sum(ar.mul(psd, freqs), axis=-1), total)
-    cum = jnp.cumsum(psd, axis=-1)
-    roll_idx = jnp.argmax(cum >= 0.85 * cum[..., -1:], axis=-1)
+    # rolloff threshold math in the target arithmetic (format parity):
+    # rounded prefix energies against a rounded 0.85·total threshold
+    cum = ar.cumsum(psd, axis=-1)
+    thr = ar.mul(ar.rnd(jnp.asarray(0.85, psd.dtype)), cum[..., -1:])
+    roll_idx = jnp.argmax(cum >= thr, axis=-1)
     rolloff = freqs[roll_idx]
     # 4 log-spaced band energies (rounded ratios)
     bands = []
@@ -88,19 +268,22 @@ def spectral_features(ar: Arith, psd: jax.Array, sr: float) -> jax.Array:
     return jnp.stack([centroid, rolloff, *bands], axis=-1)
 
 
-def _dct2(ar: Arith, x: jax.Array, k: int) -> jax.Array:
-    n = x.shape[-1]
+# ---------------------------------------------------------------------------
+# Cached, pre-rounded feature tables (mel filterbank, DCT basis)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _dct_basis(n: int, k: int, fmt_name: str, dtype_name: str) -> np.ndarray:
     basis = np.cos(np.pi / n * (np.arange(n) + 0.5)[None, :]
                    * np.arange(k)[:, None])
-    basis = ar.rnd(jnp.asarray(basis, x.dtype))
-    return ar.rnd(jnp.einsum("kn,...n->...k", basis, x))
+    ar = Arith.make(fmt_name)
+    with jax.ensure_compile_time_eval():
+        return np.asarray(ar.rnd(jnp.asarray(basis, jnp.dtype(dtype_name))))
 
 
-def mfcc(ar: Arith, psd: jax.Array, sr: float, n_mel: int = 20,
-         n_coef: int = 13) -> jax.Array:
-    """Mel-frequency cepstral coefficients from a (rounded) PSD."""
-    n = psd.shape[-1]
-    # mel filterbank (precomputed table, stored rounded)
+@functools.lru_cache(maxsize=None)
+def _mel_filterbank(n: int, sr: float, n_mel: int, fmt_name: str,
+                    dtype_name: str) -> np.ndarray:
     fmax = sr / 2
     mel = lambda f: 2595 * np.log10(1 + f / 700)
     imel = lambda m: 700 * (10 ** (m / 2595) - 1)
@@ -113,7 +296,21 @@ def mfcc(ar: Arith, psd: jax.Array, sr: float, n_mel: int = 20,
             fb[i, a:b] = np.linspace(0, 1, b - a, endpoint=False)
         if c > b:
             fb[i, b:c] = np.linspace(1, 0, c - b, endpoint=False)
-    fbq = ar.rnd(jnp.asarray(fb, psd.dtype))
+    ar = Arith.make(fmt_name)
+    with jax.ensure_compile_time_eval():
+        return np.asarray(ar.rnd(jnp.asarray(fb, jnp.dtype(dtype_name))))
+
+
+def _dct2(ar: Arith, x: jax.Array, k: int) -> jax.Array:
+    basis = jnp.asarray(_dct_basis(x.shape[-1], k, ar.name, str(x.dtype)))
+    return ar.rnd(jnp.einsum("kn,...n->...k", basis, x))
+
+
+def mfcc(ar: Arith, psd: jax.Array, sr: float, n_mel: int = 20,
+         n_coef: int = 13) -> jax.Array:
+    """Mel-frequency cepstral coefficients from a (rounded) PSD."""
+    fbq = jnp.asarray(_mel_filterbank(psd.shape[-1], sr, n_mel, ar.name,
+                                      str(psd.dtype)))
     energies = ar.rnd(jnp.einsum("mn,...n->...m", fbq, psd))
     log_e = ar.log(jnp.maximum(energies, 1e-20))
     return _dct2(ar, log_e, n_coef)

@@ -20,5 +20,6 @@ from .formats import (  # noqa: F401
     PositFormat,
     get_format,
 )
-from .posit import decode, encode, round_to_posit  # noqa: F401
+from .posit import (decode, encode, round_to_posit,  # noqa: F401
+                    round_to_posit_codec)
 from .floatsim import round_to_float  # noqa: F401

@@ -14,6 +14,7 @@ this interface, so a single ``--format`` flag sweeps every arithmetic.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Union
 
 import jax
@@ -21,7 +22,40 @@ import jax.numpy as jnp
 
 from .floatsim import round_to_float
 from .formats import FloatFormat, PositFormat, get_format
-from .posit import round_to_posit
+from .posit import round_to_posit, round_to_posit_codec
+
+# -- posit rounding backend ---------------------------------------------------
+# "jnp"    — direct float-bit rounding in plain jnp (default off-TPU)
+# "pallas" — fused Pallas round kernel (default on TPU)
+# "codec"  — encode∘decode oracle (slow; for A/B validation)
+# "auto"   — pick by jax.default_backend()
+_ROUND_BACKENDS = ("auto", "jnp", "pallas", "codec")
+_round_backend = os.environ.get("REPRO_ROUND_BACKEND", "auto")
+
+
+def set_round_backend(name: str) -> None:
+    """Select how posit rounding is realized (see module comment)."""
+    if name not in _ROUND_BACKENDS:
+        raise ValueError(f"round backend {name!r} not in {_ROUND_BACKENDS}")
+    global _round_backend
+    _round_backend = name
+
+
+def get_round_backend() -> str:
+    """The effective backend after resolving ``auto``."""
+    if _round_backend != "auto":
+        return _round_backend
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _round_posit_dispatch(x: jax.Array, fmt: PositFormat) -> jax.Array:
+    backend = get_round_backend()
+    if backend == "pallas":
+        from repro.kernels.posit_round import posit_round
+        return posit_round(x, fmt)
+    if backend == "codec":
+        return round_to_posit_codec(x, fmt, dtype=x.dtype)
+    return round_to_posit(x, fmt, dtype=x.dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +86,7 @@ class Arith:
         if self.exact and x.dtype == jnp.float32:
             return x
         if self.is_posit:
-            return round_to_posit(x, self.fmt, dtype=x.dtype)
+            return _round_posit_dispatch(x, self.fmt)
         return round_to_float(x, self.fmt)
 
     # -- elementary ops (each correctly rounded to the format) ----------------
@@ -73,7 +107,11 @@ class Arith:
 
     def fma(self, a, b, c):
         """Fused multiply-add: one rounding (PRAU-style MAC)."""
-        return self.rnd(jnp.asarray(a) * jnp.asarray(b) + jnp.asarray(c))
+        a, b, c = jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)
+        if self.is_posit and get_round_backend() == "pallas":
+            from repro.kernels.posit_round import posit_fma_round
+            return posit_fma_round(a, b, c, self.fmt)
+        return self.rnd(a * b + c)
 
     # -- transcendental (libm computes wide, result stored in format; the
     # paper's embedded port uses table-based trig, which likewise produces a
@@ -125,6 +163,22 @@ class Arith:
 
         acc, _ = jax.lax.scan(step, jnp.zeros_like(moved[0]), moved)
         return acc
+
+    def cumsum(self, a, axis=-1):
+        """Rounded prefix sums: for posits each prefix is one quire-fused
+        accumulation rounded once; IEEE rounds after every partial add,
+        mirroring ``sum``."""
+        a = jnp.asarray(a)
+        if self.is_posit or self.exact:
+            return self.rnd(jnp.cumsum(a, axis=axis))
+        moved = jnp.moveaxis(a, axis, 0)
+
+        def step(acc, p):
+            acc = self.rnd(acc + p)
+            return acc, acc
+
+        _, out = jax.lax.scan(step, jnp.zeros_like(moved[0]), moved)
+        return jnp.moveaxis(out, 0, axis)
 
     def mean(self, a, axis=-1):
         a = jnp.asarray(a)

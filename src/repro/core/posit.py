@@ -189,8 +189,95 @@ def encode(values: jax.Array, fmt: PositFormat) -> jax.Array:
 # Round-through (quantize a float tensor onto the posit lattice)
 # ---------------------------------------------------------------------------
 
+def round_posit_math(x: jax.Array, fmt: PositFormat) -> jax.Array:
+    """Direct rounding onto the posit lattice by float-bit manipulation.
+
+    Instead of the encode→decode codec round trip (regime construction,
+    clz, exponent reassembly — ~60 elementwise ops), derive the regime run
+    length from the float exponent and RNE the float's own significand in
+    place at the posit's last kept bit.  With ``shift`` as in ``encode``
+    (the number of (exponent ++ mantissa) bits the posit cannot keep at
+    this scale), the float-bit integer and the posit pattern agree on
+    guard/sticky/LSB at that position, so integer RNE on the float bits
+    lands on exactly the value ``decode(encode(x))`` produces — including
+    carries across binade and regime boundaries, which step to the next
+    posit (always a power of two, always representable in range).
+
+    Two non-obvious cases:
+    * e-field truncation (``shift > mbits``, at most ``es`` bits): the
+      kept bits extend into the float's exponent field.  Adding 1 to the
+      biased exponent makes ``bias + 1 ≡ 0 (mod 8) ⊇ (mod 2^es)``, so
+      truncating the adjusted bits truncates the power-of-two scale
+      itself, matching the decoded zero-fill of missing exponent bits.
+    * pure-regime patterns (``shift == es + mbits``): the pattern's last
+      kept bit is the regime's low bit — 0 for r ≥ 0, 1 for r < 0 — not a
+      bit of the float, so the RNE tie-break LSB is overridden there.
+
+    Elementwise only (no clz/popcount), hence Pallas-safe; shared by the
+    jnp fast path and the fused kernels in ``repro.kernels.posit_round``.
+    Bit-identity vs the codec oracle is tested exhaustively (tests/).
+    """
+    n, es = fmt.n, fmt.es
+    if x.dtype == jnp.float64:
+        U, mbits, ebits, bias = jnp.uint64, 52, 11, 1023
+        nan_bits, dtype = 0x7FF8000000000000, jnp.float64
+    else:
+        x = x.astype(jnp.float32)
+        U, mbits, ebits, bias = jnp.uint32, 23, 8, 127
+        nan_bits, dtype = 0x7FC00000, jnp.float32
+    tbits = es + mbits
+    sign_mask = 1 << (mbits + ebits)
+    full_exp = ((1 << ebits) - 1) << mbits                # |Inf| bit pattern
+    # saturation bounds as bit patterns (positive-float ordering is the
+    # integer ordering, so the clamp runs in the integer domain)
+    minpos_bits = (bias - fmt.max_scale) << mbits
+    maxpos_bits = (bias + fmt.max_scale) << mbits
+
+    bits = lax.bitcast_convert_type(x, U)
+    sbit = bits & U(sign_mask)
+    mag = bits & U(sign_mask - 1)
+    # zero via the same FLOAT compare the codec runs: on FTZ backends
+    # (XLA CPU/TPU) subnormals flush to zero in both paths, on non-FTZ
+    # backends both clamp them up to minpos — bit-identical either way
+    is_zero = x == 0
+    is_nar = mag >= U(full_exp)                           # ±Inf or NaN
+    m = jnp.clip(mag, U(minpos_bits), U(maxpos_bits))
+
+    q = (m >> U(mbits)).astype(jnp.int32) - bias          # power-of-two scale
+    r = q >> es                                           # regime value
+    nr = jnp.where(r >= 0, r + 2, 1 - r)                  # regime bit count
+    drop = nr + (tbits - (n - 1))                         # == encode's shift
+    dropc = jnp.clip(drop, 1, tbits).astype(U)
+
+    adj = m + U(1 << mbits)                               # bias+1 alignment
+    half_ulp = U(1) << (dropc - U(1))
+    lsb = jnp.where(drop < tbits,
+                    (adj >> dropc) & U(1),
+                    jnp.where(r >= 0, U(0), U(1)))
+    rounded = (adj + (half_ulp - U(1)) + lsb) & ~(U(2) * half_ulp - U(1))
+    out = rounded - U(1 << mbits)
+    if 2 + tbits - (n - 1) < 1:                           # only wide posits
+        out = jnp.where(drop >= 1, out, m)                # can be exact
+    out = out | sbit
+    out = jnp.where(is_zero, U(0), out)
+    out = jnp.where(is_nar, U(nan_bits), out)
+    return lax.bitcast_convert_type(out, dtype)
+
+
 @functools.partial(jax.jit, static_argnums=(1, 2))
 def round_to_posit(x: jax.Array, fmt: PositFormat, dtype=None) -> jax.Array:
-    """encode∘decode: nearest posit value, in float."""
+    """Nearest posit value, in float — the direct float-bit fast path.
+
+    Bit-identical to :func:`round_to_posit_codec` (the oracle) on every
+    input; roughly 4x fewer elementwise ops and no clz.
+    """
+    out_dtype = dtype or x.dtype
+    return round_posit_math(x, fmt).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def round_to_posit_codec(x: jax.Array, fmt: PositFormat, dtype=None
+                         ) -> jax.Array:
+    """encode∘decode: nearest posit value, in float (codec oracle path)."""
     out_dtype = dtype or x.dtype
     return decode(encode(x, fmt), fmt, dtype=out_dtype)

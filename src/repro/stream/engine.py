@@ -2,10 +2,13 @@
 
 Chunks from a fleet of simulated wearables flow in (any interleaving across
 patients; in-order within one stream).  Each patient's dispatcher emits
-fixed-size windows exactly once; the router groups ready windows by
-(task, format); the engine pads each group to a small set of batch buckets and
-runs the shared jit-compiled window function, so steady-state traffic hits a
-handful of compiled programs regardless of fleet size or arrival pattern.
+fixed-size windows exactly once; ready windows are kept grouped per
+(patient, task) with per-(task, format) counts maintained incrementally, so
+ingest and pump bookkeeping stay O(1) per window instead of re-routing and
+re-counting the whole pending backlog on every pump.  The engine pads each
+dispatch group to a small set of batch buckets and runs the shared
+jit-compiled window function, so steady-state traffic hits a handful of
+compiled programs regardless of fleet size or arrival pattern.
 Per-dispatch wall-clock and per-window model energy land in the ledger.
 """
 from __future__ import annotations
@@ -15,7 +18,6 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .accounting import EnergyLedger
@@ -26,16 +28,20 @@ from .router import PrecisionRouter
 
 def bucket_size(n: int, max_batch: int) -> int:
     """Smallest power of two ≥ n (capped): bounds jit recompilation to
-    log2(max_batch)+1 batch shapes per (task, format)."""
-    b = 1
-    while b < n and b < max_batch:
-        b *= 2
-    return min(b, max_batch)
+    log2(max_batch)+1 batch shapes per (task, format).  O(1) bit math."""
+    if n <= 1:
+        return 1
+    return min(1 << (n - 1).bit_length(), max_batch)
 
 
 @dataclasses.dataclass
 class WindowResult:
-    """One window's inference output with full provenance."""
+    """One window's inference output with full provenance.
+
+    ``outputs`` holds zero-copy row views into the batch output arrays —
+    the batch is materialized from device to numpy once per dispatch, not
+    once per window.
+    """
 
     patient: str
     task: str
@@ -60,7 +66,10 @@ class StreamEngine:
         self.ledger = EnergyLedger()
         self.results: List[WindowResult] = []
         self._dispatchers: Dict[Tuple[str, str], WindowDispatcher] = {}
-        self._pending: List[Window] = []
+        # pending windows grouped per (patient, task) in arrival order;
+        # routed per GROUP at pump time (not per window), so a re-pinned
+        # patient picks up the new format on the next pump
+        self._pending: Dict[Tuple[str, str], List[Window]] = {}
         self._pending_counts: Dict[Tuple[str, str], int] = {}
         self._fns: Dict[Tuple[str, str], object] = {}
 
@@ -75,6 +84,12 @@ class StreamEngine:
         if fmt is not None:
             self.router.pin(patient, fmt)
 
+    def _group_key(self, patient: str, task: str) -> Tuple[str, str]:
+        try:
+            return (task, self.router.route(patient, task).fmt)
+        except Exception:
+            return (task, "?")  # unroutable: error surfaces at pump()
+
     def ingest(self, patient: str, task: str, modality: str,
                chunk: np.ndarray) -> None:
         """Feed one in-order chunk; dispatches automatically once a full
@@ -83,14 +98,10 @@ class StreamEngine:
         if key not in self._dispatchers:
             self.register_patient(patient, task)
         for w in self._dispatchers[key].push(modality, chunk):
-            self._pending.append(w)
+            self._pending.setdefault(key, []).append(w)
             # auto-pump only when ONE (task, fmt) group can fill a batch —
-            # a fleet-total trigger would re-group the whole pending list on
-            # every ingest once many sparse groups accumulate
-            try:
-                gkey = (task, self.router.route(w.patient, task).fmt)
-            except Exception:
-                gkey = (task, "?")  # unroutable: error surfaces at pump()
+            # O(1) count maintenance per emitted window
+            gkey = self._group_key(patient, task)
             cnt = self._pending_counts.get(gkey, 0) + 1
             self._pending_counts[gkey] = cnt
             if cnt >= self.max_batch:
@@ -103,49 +114,58 @@ class StreamEngine:
         ``include_partial=False`` (the auto-pump mode) only dispatches groups
         that fill a whole ``max_batch`` — ragged remainders stay pending for
         a later pump/drain instead of burning a padded batch per trickle.
-        A failing dispatch re-queues every unprocessed window before the
-        exception propagates: one bad route never drops healthy streams.
+        A failing dispatch leaves every unprocessed window pending before
+        the exception propagates: one bad route never drops healthy streams.
         """
-        pending, self._pending = self._pending, []
-        n = 0
-        # route per window: an unroutable window is retained (and its error
-        # surfaced below) without holding any other group hostage
-        groups: Dict[Tuple[str, str], List[Window]] = {}
+        # route once per (patient, task) group — not once per window
+        groups: Dict[Tuple[str, str], List[Tuple[str, str]]] = {}
         first_err: Optional[BaseException] = None
-        for w in pending:
-            try:
-                key = (w.task, self.router.route(w.patient, w.task).fmt)
-            except Exception as e:
-                first_err = first_err or e
-                self._pending.append(w)
+        for (patient, task), ws in self._pending.items():
+            if not ws:
                 continue
-            groups.setdefault(key, []).append(w)
-        # a failing group re-queues its own tail; other groups still dispatch
-        for (task, fmt), ws in groups.items():
-            pos = 0
             try:
-                while len(ws) - pos >= self.max_batch or (
-                        include_partial and pos < len(ws)):
-                    batch = ws[pos: pos + self.max_batch]
+                fmt = self.router.route(patient, task).fmt
+            except Exception as e:          # stays pending, surfaces below
+                first_err = first_err or e
+                continue
+            groups.setdefault((task, fmt), []).append((patient, task))
+        n = 0
+        for (task, fmt), members in groups.items():
+            total = sum(len(self._pending[k]) for k in members)
+            try:
+                while total >= self.max_batch or (include_partial
+                                                  and total > 0):
+                    batch: List[Window] = []
+                    take: List[Tuple[Tuple[str, str], int]] = []
+                    for k in members:
+                        if len(batch) == self.max_batch:
+                            break
+                        ws = self._pending[k]
+                        t = min(len(ws), self.max_batch - len(batch))
+                        if t:
+                            batch.extend(ws[:t])
+                            take.append((k, t))
                     self._dispatch(task, fmt, batch)
-                    pos += len(batch)
+                    for k, t in take:       # consume only after success
+                        del self._pending[k][:t]
+                    total -= len(batch)
                     n += len(batch)
             except Exception as e:
                 first_err = first_err or e
-            self._pending.extend(ws[pos:])
         self._recount_pending()
         if first_err is not None:
             raise first_err
         return n
 
     def _recount_pending(self) -> None:
+        """Rebuild the auto-pump trigger counts: one route per non-empty
+        (patient, task) group, independent of backlog depth."""
+        self._pending = {k: ws for k, ws in self._pending.items() if ws}
         self._pending_counts = {}
-        for w in self._pending:
-            try:
-                gkey = (w.task, self.router.route(w.patient, w.task).fmt)
-            except Exception:
-                gkey = (w.task, "?")
-            self._pending_counts[gkey] = self._pending_counts.get(gkey, 0) + 1
+        for (patient, task), ws in self._pending.items():
+            gkey = self._group_key(patient, task)
+            self._pending_counts[gkey] = \
+                self._pending_counts.get(gkey, 0) + len(ws)
 
     def drain(self) -> int:
         """End-of-stream flush: dispatch everything still pending."""
@@ -163,15 +183,19 @@ class StreamEngine:
         B = len(windows)
         Bpad = self.max_batch if self.pad_to_max \
             else bucket_size(B, self.max_batch)
-        arrays: Dict[str, jax.Array] = {}
+        # fresh per-dispatch buffers: safe to donate to the jit call, so
+        # XLA may reuse their pages for outputs instead of allocating
+        arrays: Dict[str, np.ndarray] = {}
         for m in pipe.spec.modalities:
             stack = np.zeros((Bpad, m.channels, pipe.spec.window_samples(m)),
                              np.float32)
             for i, w in enumerate(windows):
                 stack[i] = w.arrays[m.name]
-            arrays[m.name] = jnp.asarray(stack)
+            arrays[m.name] = stack
         t0 = time.perf_counter()
         outs = fn(arrays)
+        # one device→host materialization per batch; WindowResult rows are
+        # zero-copy views into these arrays
         outs = {k: np.asarray(jax.block_until_ready(v))
                 for k, v in outs.items()}
         dt = time.perf_counter() - t0

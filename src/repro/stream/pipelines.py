@@ -30,6 +30,15 @@ from .ring import ModalitySpec, WindowSpec
 
 RPEAK_WINDOW_S = 2.0
 
+
+def _jit_batch_fn(fn):
+    """jit the batched window fn, donating the input buffers: the engine
+    builds fresh arrays per dispatch, so XLA may reuse their pages for the
+    outputs. CPU ignores donation (and warns) — skip it there."""
+    if jax.default_backend() == "cpu":
+        return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=0)
+
 COUGH_SPEC = WindowSpec(
     task="cough",
     modalities=(ModalitySpec("audio", 2, AUDIO_SR),
@@ -69,7 +78,7 @@ def cough_pipeline(forest: Forest) -> Pipeline:
             # offline path.
             return {"p_cough": scorer(arrays["audio"], arrays["imu"])}
 
-        return fn
+        return _jit_batch_fn(fn)
 
     # bill energy for the forest actually deployed, not the default size
     ops = cough_window_op_counts(n_trees=forest.feat.shape[0],
@@ -106,11 +115,10 @@ def rpeak_pipeline(window_s: float = RPEAK_WINDOW_S,
             return {"scores": norm,
                     "peak_count": jnp.sum(is_peak).astype(jnp.int32)}
 
-        @jax.jit
         def fn(arrays: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
             sig = arrays["ecg"][:, 0, :]            # (B, n) single lead
             return jax.vmap(one_window)(sig)
 
-        return fn
+        return _jit_batch_fn(fn)
 
     return Pipeline("rpeak", spec, make_fn, rpeak_window_op_counts(n))
