@@ -6,12 +6,17 @@ per-format throughput (windows/sec) and model energy (nJ/window).
   python benchmarks/stream_bench.py --smoke      # CI-sized single pass
   python benchmarks/stream_bench.py --patients 128 --windows 10
   python benchmarks/stream_bench.py --json       # + BENCH_stream.json
+  python benchmarks/stream_bench.py --escalate   # quality-feedback routing
 
 Output follows benchmarks/run.py conventions: ``name,us_per_call,derived``
 CSV rows, one per (task, format) group plus a fleet rollup.  ``--json``
 additionally writes a machine-readable ``BENCH_stream.json`` (windows/sec,
-µs/window, nJ/window per task×format) so the perf trajectory is tracked
-across PRs.
+µs/window, nJ/window per task×format, escalation-rate stats) so the perf
+trajectory is tracked across PRs; ``tests/test_stream.py`` pins its schema
+against the committed copy.  ``--escalate`` arms the XBioSiP-style
+precision-escalation policy on the R-peak posit8 arm, so the JSON's
+``escalation`` block reports per-patient extra nJ and the fleet escalation
+rate.
 """
 import argparse
 import json
@@ -71,6 +76,81 @@ def stream_fleet(engine, queues, rng):
         if not chunks:
             live.pop(k)
     engine.drain()
+    engine.finalize_all()
+
+
+def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
+        homogeneous: bool = False, escalate: bool = False, seed: int = 0,
+        json_path=None, forest=None):
+    """Build and stream the fleet; returns the machine-readable result doc
+    (and writes it to ``json_path`` when given)."""
+    import jax
+
+    from repro.core.arith import get_round_backend
+    from repro.stream import (EscalationPolicy, PrecisionRouter,
+                              StreamEngine, cough_pipeline, rpeak_pipeline)
+
+    if forest is None:
+        t0 = time.perf_counter()
+        forest = build_forest()
+        print(f"# forest trained in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+
+    rng = np.random.default_rng(seed)
+    queues, pins = build_fleet(patients, windows,
+                               mixed=not homogeneous, rng=rng)
+    engine = StreamEngine({"cough": cough_pipeline(forest),
+                           "rpeak": rpeak_pipeline()},
+                          router=PrecisionRouter(
+                              patient_formats=pins,
+                              escalation=EscalationPolicy() if escalate
+                              else None),
+                          max_batch=max_batch,
+                          pad_to_max=True)  # one compiled shape per arm
+
+    if not smoke:  # warm the compile caches, then measure steady state
+        t0 = time.perf_counter()
+        stream_fleet(engine, queues, np.random.default_rng(seed + 1))
+        print(f"# warmup pass in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+        engine.reset()
+
+    t0 = time.perf_counter()
+    stream_fleet(engine, queues, np.random.default_rng(seed + 2))
+    wall = time.perf_counter() - t0
+
+    n = len(engine.results)
+    expect = patients * windows  # every patient emits each window
+    assert n == expect, f"windows processed {n} != expected {expect}"
+    groups = {}
+    for key, row in engine.fleet_summary().items():
+        us = 1e6 / row["windows_per_s"] if row["windows_per_s"] else 0.0
+        groups[key] = {"us_per_window": us, **row}
+    esc = engine.ledger.escalation_summary()
+    esc_windows = sum(int(d["windows"]) for d in esc.values())
+    doc = {
+        "benchmark": "stream_bench",
+        "config": {"patients": patients, "windows": windows,
+                   "max_batch": max_batch, "smoke": smoke,
+                   "homogeneous": homogeneous, "escalate": escalate,
+                   "seed": seed, "backend": jax.default_backend(),
+                   "round_backend": get_round_backend()},
+        "groups": groups,
+        "escalation": {
+            "patients": esc,
+            "windows_escalated": esc_windows,
+            "extra_nj": sum(d["extra_nj"] for d in esc.values()),
+            "rate": esc_windows / n if n else 0.0,
+        },
+        "wall": {"elapsed_s": wall, "windows": n,
+                 "end_to_end_windows_per_s": n / wall},
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_path}", file=sys.stderr)
+    return doc
 
 
 def main():
@@ -85,6 +165,9 @@ def main():
                     help="CI-sized defaults + no warmup pass")
     ap.add_argument("--homogeneous", action="store_true",
                     help="paper-table formats only (no fp16/posit8 arms)")
+    ap.add_argument("--escalate", action="store_true",
+                    help="arm the quality-feedback precision escalation "
+                         "policy (posit8→posit10→posit16)")
     ap.add_argument("--json", nargs="?", const="BENCH_stream.json",
                     default=None, metavar="PATH",
                     help="also write machine-readable results (default "
@@ -93,73 +176,31 @@ def main():
     args = ap.parse_args()
     smoke_d, full_d = (8, 2, 8), (64, 4, 32)
     defaults = smoke_d if args.smoke else full_d
-    args.patients = args.patients if args.patients is not None else defaults[0]
-    args.windows = args.windows if args.windows is not None else defaults[1]
-    args.max_batch = (args.max_batch if args.max_batch is not None
-                      else defaults[2])
-    if args.patients < 2:
+    patients = args.patients if args.patients is not None else defaults[0]
+    windows = args.windows if args.windows is not None else defaults[1]
+    max_batch = (args.max_batch if args.max_batch is not None
+                 else defaults[2])
+    if patients < 2:
         ap.error("--patients must be ≥ 2 (one cough + one ECG arm)")
 
-    from repro.stream import (PrecisionRouter, StreamEngine, cough_pipeline,
-                              rpeak_pipeline)
-
-    t0 = time.perf_counter()
-    forest = build_forest()
-    print(f"# forest trained in {time.perf_counter() - t0:.1f}s",
-          file=sys.stderr)
-
-    rng = np.random.default_rng(args.seed)
-    queues, pins = build_fleet(args.patients, args.windows,
-                               mixed=not args.homogeneous, rng=rng)
-    engine = StreamEngine({"cough": cough_pipeline(forest),
-                           "rpeak": rpeak_pipeline()},
-                          router=PrecisionRouter(patient_formats=pins),
-                          max_batch=args.max_batch,
-                          pad_to_max=True)  # one compiled shape per arm
-
-    if not args.smoke:  # warm the compile caches, then measure steady state
-        t0 = time.perf_counter()
-        stream_fleet(engine, queues, np.random.default_rng(args.seed + 1))
-        print(f"# warmup pass in {time.perf_counter() - t0:.1f}s",
-              file=sys.stderr)
-        engine.reset()
-
-    t0 = time.perf_counter()
-    stream_fleet(engine, queues, np.random.default_rng(args.seed + 2))
-    wall = time.perf_counter() - t0
-
-    n = len(engine.results)
-    expect = args.patients * args.windows  # every patient emits each window
-    assert n == expect, f"windows processed {n} != expected {expect}"
-    groups = {}
-    for key, row in engine.fleet_summary().items():
-        us = 1e6 / row["windows_per_s"] if row["windows_per_s"] else 0.0
-        groups[key] = {"us_per_window": us, **row}
-        print(f"stream_bench/{key},{us:.0f},"
+    doc = run(patients, windows, max_batch, smoke=args.smoke,
+              homogeneous=args.homogeneous, escalate=args.escalate,
+              seed=args.seed, json_path=args.json)
+    for key, row in doc["groups"].items():
+        print(f"stream_bench/{key},{row['us_per_window']:.0f},"
               f"windows={row['windows']};"
               f"windows_per_s={row['windows_per_s']:.1f};"
-              f"nj_per_window={row['nj_per_window']:.1f}")
-    print(f"stream_bench/wall,0,patients={args.patients};"
-          f"windows={n};elapsed_s={wall:.2f};"
-          f"end_to_end_windows_per_s={n / wall:.1f}")
-    if args.json:
-        import jax
-        from repro.core.arith import get_round_backend
-        doc = {
-            "benchmark": "stream_bench",
-            "config": {"patients": args.patients, "windows": args.windows,
-                       "max_batch": args.max_batch, "smoke": args.smoke,
-                       "homogeneous": args.homogeneous, "seed": args.seed,
-                       "backend": jax.default_backend(),
-                       "round_backend": get_round_backend()},
-            "groups": groups,
-            "wall": {"elapsed_s": wall, "windows": n,
-                     "end_to_end_windows_per_s": n / wall},
-        }
-        with open(args.json, "w") as f:
-            json.dump(doc, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"# wrote {args.json}", file=sys.stderr)
+              f"nj_per_window={row['nj_per_window']:.1f};"
+              f"escalated={row['escalated_windows']}")
+    wall = doc["wall"]
+    print(f"stream_bench/wall,0,patients={patients};"
+          f"windows={wall['windows']};elapsed_s={wall['elapsed_s']:.2f};"
+          f"end_to_end_windows_per_s="
+          f"{wall['end_to_end_windows_per_s']:.1f}")
+    esc = doc["escalation"]
+    print(f"stream_bench/escalation,0,"
+          f"windows_escalated={esc['windows_escalated']};"
+          f"rate={esc['rate']:.3f};extra_nj={esc['extra_nj']:.1f}")
 
 
 if __name__ == "__main__":

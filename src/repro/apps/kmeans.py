@@ -11,12 +11,22 @@ import jax.numpy as jnp
 from repro.core.arith import Arith
 
 
-def kmeans_1d(ar: Arith, x: jax.Array, k: int = 2, iters: int = 12
-              ) -> jax.Array:
-    """1-D k-means, all arithmetic rounded to the format. Returns centroids."""
+def kmeans_1d(ar: Arith, x: jax.Array, k: int = 2, iters: int = 12,
+              init: jax.Array = None) -> jax.Array:
+    """1-D k-means, all arithmetic rounded to the format. Returns centroids.
+
+    ``init`` warm-starts the centroids (e.g. from the previous streaming
+    window's solution) instead of the lo..hi linspace — the incremental
+    2-means that powers the streaming R-peak threshold. Warm starts are
+    rounded to the format first, so centroids carried across windows stay
+    representable values of the window's arithmetic.
+    """
     x = ar.rnd(x)
-    lo, hi = jnp.min(x), jnp.max(x)
-    cent = ar.rnd(jnp.linspace(lo, hi, k).astype(x.dtype))
+    if init is not None:
+        cent = ar.rnd(jnp.asarray(init).astype(x.dtype))
+    else:
+        lo, hi = jnp.min(x), jnp.max(x)
+        cent = ar.rnd(jnp.linspace(lo, hi, k).astype(x.dtype))
     for _ in range(iters):
         d = jnp.abs(ar.sub(x[:, None], cent[None, :]))
         assign = jnp.argmin(d, axis=1)

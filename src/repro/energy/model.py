@@ -54,6 +54,45 @@ POWER_FPU_UNITS = {"FMA": 36.1, "DivSqrt": 5.42, "Conversions": 0.7}
 FFT_CYCLES = {"coprosit": 1_495_623, "fpu_ss": 1_483_287,
               "fpu_ss_nonasm": 1_192_550}
 
+# Coprosit components whose switching activity tracks the operand width: the
+# PRAU datapath plus every buffer/regfile stage that moves one posit per op.
+# Table IV measured them at the 16-bit reference; control plane (controller,
+# decoders, ALU) is width-independent.
+POSIT_WIDTH_SCALED_UW = (POWER_COPROSIT["PRAU"]
+                         + POWER_COPROSIT["Input Buffer"]
+                         + POWER_COPROSIT["Regfile"]
+                         + POWER_COPROSIT["Result FIFO"]
+                         + POWER_COPROSIT["Mem Stream FIFO"])
+POSIT_REF_BITS = 16
+
+
+def _posit_width(fmt_name) -> int:
+    """Posit width from a format name ('posit10' → 10); None otherwise."""
+    if not fmt_name or not str(fmt_name).startswith("posit"):
+        return None
+    try:
+        return int(str(fmt_name)[len("posit"):].split("e")[0])
+    except ValueError:
+        return None
+
+
+def power_total_uw(config: str, fmt: str = None) -> float:
+    """Coprocessor power for a run in ``fmt``.
+
+    The paper measured the Coprosit corner at 16-bit posits (Table IV); this
+    beyond-paper extrapolation scales the width-proportional components
+    (PRAU datapath, operand/result buffering, register file) linearly with
+    the posit width, keeping the control plane fixed — so posit8 windows are
+    cheaper than posit16 windows and the escalation ledger can price a
+    precision bump.  IEEE formats run on the fixed 32-bit FPU_ss datapath
+    and are width-blind, as in the paper.
+    """
+    p = POWER_TOTAL[config]
+    w = _posit_width(fmt) if config == "coprosit" else None
+    if w is not None and w != POSIT_REF_BITS:
+        p = p - POSIT_WIDTH_SCALED_UW * (1.0 - w / POSIT_REF_BITS)
+    return p
+
 
 def area_total(table: Dict[str, float]) -> float:
     return sum(table.values())
@@ -96,18 +135,21 @@ class OpCounts:
 
 def estimate_app_energy_nj(ops: OpCounts, config: str = "coprosit",
                            cycles_per_op: float = 1.0,
-                           overhead_factor: float = None) -> float:
+                           overhead_factor: float = None,
+                           fmt: str = None) -> float:
     """App-level energy from op counts.
 
     ``overhead_factor`` (load/store/control cycles per arithmetic op) is
     calibrated on the paper's FFT: 4096-point radix-2 has 12·(N/2)·log2 N
     ≈ 295k arithmetic ops against 1.50 M measured cycles → ≈ 5.1 cycles/op.
+    ``fmt`` (a format name) makes the posit corner width-aware — see
+    ``power_total_uw``.
     """
     if overhead_factor is None:
         fft_ops = 12 * (4096 // 2) * 12  # ~295k (cmul 6 ops + 2×cadd 4 ops... )
         overhead_factor = FFT_CYCLES["coprosit"] / fft_ops
     cycles = ops.total() * cycles_per_op * overhead_factor
-    power_uw = POWER_TOTAL[config]
+    power_uw = power_total_uw(config, fmt)
     return cycles * CLOCK_NS * 1e-9 * power_uw * 1e-6 * 1e9
 
 

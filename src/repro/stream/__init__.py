@@ -8,18 +8,21 @@ through shared jit-compiled pipelines, and per-window energy accounting
 against the paper's ASIC model.
 """
 from .accounting import (EnergyLedger, cough_window_op_counts,
-                         energy_config_for_format, rpeak_window_op_counts)
+                         energy_config_for_format, rpeak_window_op_counts,
+                         window_energy_nj)
 from .engine import StreamEngine, WindowResult, bucket_size
 from .pipelines import (COUGH_SPEC, RPEAK_SPEC, RPEAK_WINDOW_S, Pipeline,
                         cough_pipeline, rpeak_pipeline)
 from .ring import ModalitySpec, RingBuffer, Window, WindowDispatcher, WindowSpec
-from .router import PrecisionRouter, Route
+from .router import EscalationPolicy, EscalationState, PrecisionRouter, Route
+from .tracker import RPeakTracker, TrackerUpdate
 
 __all__ = [
     "COUGH_SPEC", "RPEAK_SPEC", "RPEAK_WINDOW_S",
-    "EnergyLedger", "ModalitySpec", "Pipeline", "PrecisionRouter",
-    "RingBuffer", "Route", "StreamEngine", "Window", "WindowDispatcher",
+    "EnergyLedger", "EscalationPolicy", "EscalationState", "ModalitySpec",
+    "Pipeline", "PrecisionRouter", "RPeakTracker", "RingBuffer", "Route",
+    "StreamEngine", "TrackerUpdate", "Window", "WindowDispatcher",
     "WindowResult", "WindowSpec", "bucket_size", "cough_pipeline",
     "cough_window_op_counts", "energy_config_for_format", "rpeak_pipeline",
-    "rpeak_window_op_counts",
+    "rpeak_window_op_counts", "window_energy_nj",
 ]

@@ -4,8 +4,13 @@ Arithmetic op counts per window are derived from the pipeline definitions
 (the FFT dominates cough; the slope-product integration dominates R-peak) and
 converted to nJ/window via ``energy.model.estimate_app_energy_nj`` — the same
 cycles-per-op overhead calibrated on the paper's measured FFT-4096 run.
-Posit-routed windows are costed on the Coprosit power corner, IEEE-routed
-windows on the FPU_ss corner (paper Tables IV/V).
+Posit-routed windows are costed on the Coprosit power corner — width-aware,
+so a posit8 window is cheaper than a posit16 one — and IEEE-routed windows
+on the FPU_ss corner (paper Tables IV/V).  Windows that ran above their
+patient's static format because the escalation policy raised the rung are
+additionally attributed per patient and per group (``escalation_summary`` /
+the ``escalation_nj`` column), so the energy price of quality feedback is
+auditable next to the throughput it buys.
 """
 from __future__ import annotations
 
@@ -19,6 +24,14 @@ from repro.energy.model import OpCounts, estimate_app_energy_nj, fft_op_counts
 def energy_config_for_format(fmt: str) -> str:
     """Map an arithmetic format to the paper's power corner."""
     return "coprosit" if fmt.startswith("posit") else "fpu_ss"
+
+
+def window_energy_nj(ops: OpCounts, fmt: str) -> float:
+    """Model nJ for one window computed in ``fmt`` — corner selection plus
+    posit-width-aware datapath power (``energy.model.power_total_uw``), so
+    an escalated posit8→posit16 window costs measurably more."""
+    return estimate_app_energy_nj(ops, energy_config_for_format(fmt),
+                                  fmt=fmt)
 
 
 def cough_window_op_counts(fft_n: int = 4096, n_mel: int = 20,
@@ -81,27 +94,47 @@ class GroupStats:
     padded_windows: int = 0        # bucket-padding overhead, for visibility
     latency_s: float = 0.0         # summed wall-clock of dispatches
     energy_nj: float = 0.0
+    escalated_windows: int = 0     # windows here because escalation raised fmt
+    escalation_nj: float = 0.0     # their nJ above the patients' base formats
 
 
 class EnergyLedger:
     def __init__(self):
         self.stats: Dict[Tuple[str, str], GroupStats] = {}
+        # per-patient escalation attribution: extra nJ spent above the
+        # patient's static format, and how many windows it covered
+        self.escalation: Dict[str, Dict[str, float]] = {}
 
     def record(self, task: str, fmt: str, n_windows: int, n_padded: int,
-               latency_s: float, ops_per_window: OpCounts) -> None:
+               latency_s: float, ops_per_window: OpCounts,
+               n_escalated: int = 0,
+               escalation_extra_nj: float = 0.0) -> None:
         g = self.stats.setdefault((task, fmt), GroupStats())
         g.windows += n_windows
         g.batches += 1
         g.padded_windows += n_padded
         g.latency_s += latency_s
-        per_window = estimate_app_energy_nj(
-            ops_per_window, energy_config_for_format(fmt))
-        g.energy_nj += per_window * n_windows
+        g.energy_nj += window_energy_nj(ops_per_window, fmt) * n_windows
+        g.escalated_windows += n_escalated
+        g.escalation_nj += escalation_extra_nj
+
+    def record_escalation(self, patient: str, extra_nj: float) -> None:
+        """One escalated window for ``patient``: the nJ above its base
+        format, attributed so per-patient escalation cost is auditable."""
+        d = self.escalation.setdefault(patient,
+                                       {"windows": 0, "extra_nj": 0.0})
+        d["windows"] += 1
+        d["extra_nj"] += extra_nj
+
+    def escalation_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-patient escalation attribution ({patient: windows/extra_nj})."""
+        return {p: dict(d) for p, d in sorted(self.escalation.items())}
 
     def summary(self) -> Dict[str, Dict[str, float]]:
         """{"task/fmt": {...}} plus a "fleet" rollup row."""
         out: Dict[str, Dict[str, float]] = {}
         tot_w, tot_e, tot_t = 0, 0.0, 0.0
+        tot_esc_w, tot_esc_e = 0, 0.0
         for (task, fmt), g in sorted(self.stats.items()):
             out[f"{task}/{fmt}"] = {
                 "windows": g.windows,
@@ -110,14 +143,20 @@ class EnergyLedger:
                 "windows_per_s": g.windows / g.latency_s if g.latency_s else 0.0,
                 "nj_per_window": g.energy_nj / g.windows if g.windows else 0.0,
                 "total_nj": g.energy_nj,
+                "escalated_windows": g.escalated_windows,
+                "escalation_nj": g.escalation_nj,
             }
             tot_w += g.windows
             tot_e += g.energy_nj
             tot_t += g.latency_s
+            tot_esc_w += g.escalated_windows
+            tot_esc_e += g.escalation_nj
         out["fleet"] = {
             "windows": tot_w,
             "windows_per_s": tot_w / tot_t if tot_t else 0.0,
             "nj_per_window": tot_e / tot_w if tot_w else 0.0,
             "total_nj": tot_e,
+            "escalated_windows": tot_esc_w,
+            "escalation_nj": tot_esc_e,
         }
         return out

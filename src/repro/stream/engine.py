@@ -10,6 +10,13 @@ dispatch group to a small set of batch buckets and runs the shared
 jit-compiled window function, so steady-state traffic hits a handful of
 compiled programs regardless of fleet size or arrival pattern.
 Per-dispatch wall-clock and per-window model energy land in the ledger.
+
+Pipelines that declare ``make_tracker`` (the R-peak pipeline does) get a
+per-patient stateful tracker: each dispatched window's outputs stream
+through it in order, confirmed R-peak positions come back on the
+``WindowResult`` (``outputs["peaks"]``, absolute samples), and the tracker's
+quality signal drives the router's precision-escalation policy, with the
+extra energy of escalated windows attributed in the ledger.
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from .accounting import EnergyLedger
+from .accounting import EnergyLedger, window_energy_nj
 from .pipelines import Pipeline
 from .ring import Window, WindowDispatcher
 from .router import PrecisionRouter
@@ -72,6 +79,8 @@ class StreamEngine:
         self._pending: Dict[Tuple[str, str], List[Window]] = {}
         self._pending_counts: Dict[Tuple[str, str], int] = {}
         self._fns: Dict[Tuple[str, str], object] = {}
+        # per-(patient, task) stateful trackers (pipelines with make_tracker)
+        self._trackers: Dict[Tuple[str, str], object] = {}
 
     # -- ingest ---------------------------------------------------------------
     def register_patient(self, patient: str, task: str,
@@ -199,11 +208,76 @@ class StreamEngine:
         outs = {k: np.asarray(jax.block_until_ready(v))
                 for k, v in outs.items()}
         dt = time.perf_counter() - t0
-        self.ledger.record(task, fmt, B, Bpad - B, dt, pipe.ops_per_window)
-        for i, w in enumerate(windows):
+        rows = [{k: v[i] for k, v in outs.items()}
+                for i in range(len(windows))]
+        n_esc, esc_nj = self._track(pipe, task, fmt, windows, rows)
+        self.ledger.record(task, fmt, B, Bpad - B, dt, pipe.ops_per_window,
+                           n_escalated=n_esc, escalation_extra_nj=esc_nj)
+        for w, row in zip(windows, rows):
             self.results.append(WindowResult(
-                w.patient, task, w.widx, fmt, w.t0_s,
-                {k: v[i] for k, v in outs.items()}))
+                w.patient, task, w.widx, fmt, w.t0_s, row))
+
+    def _track(self, pipe: Pipeline, task: str, fmt: str,
+               windows: List[Window], rows: List[Dict[str, np.ndarray]]
+               ) -> Tuple[int, float]:
+        """Run the per-patient stateful trackers over a dispatched batch.
+
+        Windows hit each tracker in ``widx`` order (the pending groups are
+        FIFO per patient), the tracker's confirmed peaks land on the window's
+        outputs, and its quality signal feeds the router's escalation policy
+        — affecting how the patient's NEXT windows are routed.  Windows that
+        ran above the patient's static format are billed to the escalation
+        column, per patient and per group.
+        """
+        if pipe.make_tracker is None:
+            return 0, 0.0
+        n_esc, esc_nj = 0, 0.0
+        # fmt and ops are batch constants; base formats and the escalation
+        # energy delta are memoized so the per-window loop stays cheap
+        base_fmts: Dict[str, str] = {}
+        extra_by_base: Dict[str, float] = {}
+        for w, row in zip(windows, rows):
+            key = (w.patient, task)
+            tr = self._trackers.get(key)
+            if tr is None:
+                tr = self._trackers[key] = pipe.make_tracker(w.patient)
+            upd = tr.update(w.widx, row, fmt)
+            row["peaks"] = upd.new_peaks
+            base_fmt = base_fmts.get(w.patient)
+            if base_fmt is None:
+                base_fmt = base_fmts[w.patient] = \
+                    self.router.base_route(w.patient, task).fmt
+            if fmt != base_fmt:
+                extra = extra_by_base.get(base_fmt)
+                if extra is None:
+                    extra = extra_by_base[base_fmt] = (
+                        window_energy_nj(pipe.ops_per_window, fmt)
+                        - window_energy_nj(pipe.ops_per_window, base_fmt))
+                n_esc += 1
+                esc_nj += extra
+                self.ledger.record_escalation(w.patient, extra)
+            self.router.observe(w.patient, task, upd.boundary_gap,
+                                upd.mid_refractory)
+        return n_esc, esc_nj
+
+    # -- stateful trackers ----------------------------------------------------
+    def tracker_for(self, patient: str, task: str):
+        """The per-patient tracker (None until its first window dispatches)."""
+        return self._trackers.get((patient, task))
+
+    def finalize_patient(self, patient: str, task: str) -> np.ndarray:
+        """End-of-stream flush for one tracked stream: commits the tracker's
+        deferred stitching margin.  Returns the tail peaks; the tracker's
+        ``peaks`` then holds the complete stream."""
+        tr = self._trackers.get((patient, task))
+        if tr is None:
+            return np.zeros(0, np.int64)
+        return tr.finalize(self.router.route(patient, task).fmt)
+
+    def finalize_all(self) -> Dict[Tuple[str, str], np.ndarray]:
+        """Flush every tracked stream; {(patient, task): tail peaks}."""
+        return {key: self.finalize_patient(*key)
+                for key in sorted(self._trackers)}
 
     def reset(self) -> None:
         """Fresh streams and metrics; compiled (task, format) functions are
@@ -211,6 +285,7 @@ class StreamEngine:
         self._dispatchers.clear()
         self._pending.clear()
         self._pending_counts.clear()
+        self._trackers.clear()
         self.results = []
         self.ledger = EnergyLedger()
 

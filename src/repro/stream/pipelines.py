@@ -13,12 +13,13 @@ can put nJ/window numbers next to throughput (see ``stream.accounting``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict
+import functools
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.apps.bayeslope import rpeak_window_scores
+from repro.apps.bayeslope import RPEAK_WINDOW_S, rpeak_window_scores
 from repro.apps.cough import make_cough_scorer
 from repro.apps.forest import Forest
 from repro.core.arith import Arith
@@ -27,8 +28,7 @@ from repro.energy.model import OpCounts
 
 from .accounting import cough_window_op_counts, rpeak_window_op_counts
 from .ring import ModalitySpec, WindowSpec
-
-RPEAK_WINDOW_S = 2.0
+from .tracker import RPeakTracker
 
 
 def _jit_batch_fn(fn):
@@ -59,6 +59,11 @@ class Pipeline:
     batched modality arrays (each ``(B, channels, n)`` float32) to a dict of
     batched outputs; rows are independent, so any batch size reuses the same
     compiled code per bucket and padding rows never affect real rows.
+
+    ``make_tracker`` (optional) builds a per-patient stateful tracker from a
+    patient id; the engine feeds it each window's outputs in ``widx`` order
+    (``tracker.update(widx, outputs, fmt)``) and its updates land on the
+    ``WindowResult`` plus the router's escalation feedback.
     """
 
     name: str
@@ -66,6 +71,7 @@ class Pipeline:
     make_fn: Callable[[str], Callable[[Dict[str, jax.Array]],
                                       Dict[str, jax.Array]]]
     ops_per_window: OpCounts
+    make_tracker: Optional[Callable[[str], object]] = None
 
 
 def cough_pipeline(forest: Forest) -> Pipeline:
@@ -86,9 +92,45 @@ def cough_pipeline(forest: Forest) -> Pipeline:
     return Pipeline("cough", COUGH_SPEC, make_fn, ops)
 
 
+@functools.lru_cache(maxsize=None)
+def _rpeak_batch_fn(fmt: str, peak_threshold: float, refr: int):
+    """Compiled-batch-fn cache shared across Pipeline/engine instances —
+    re-creating an engine (benchmark warmups, property tests streaming one
+    record many ways) reuses the jit cache instead of re-tracing."""
+    ar = Arith.make(fmt)
+
+    def one_window(sig: jax.Array) -> Dict[str, jax.Array]:
+        norm = rpeak_window_scores(ar, sig)
+        # candidate count: above threshold AND the maximum within the
+        # ±refractory neighbourhood (≥ towards the past, > towards the
+        # future — the same tie-break as the offline detector's greedy
+        # pass). A cheap per-window HR proxy, not the Bayesian stage.
+        is_peak = norm > peak_threshold
+        ones = jnp.ones((), jnp.bool_)
+        for d in range(1, refr + 1):
+            ge_past = jnp.concatenate(
+                [jnp.broadcast_to(ones, (d,)), norm[d:] >= norm[:-d]])
+            gt_future = jnp.concatenate(
+                [norm[:-d] > norm[d:], jnp.broadcast_to(ones, (d,))])
+            is_peak &= ge_past & gt_future
+        return {"scores": norm,
+                "peak_count": jnp.sum(is_peak).astype(jnp.int32)}
+
+    def fn(arrays: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        sig = arrays["ecg"][:, 0, :]            # (B, n) single lead
+        return jax.vmap(one_window)(sig)
+
+    return _jit_batch_fn(fn)
+
+
 def rpeak_pipeline(window_s: float = RPEAK_WINDOW_S,
                    peak_threshold: float = 0.5,
-                   refractory_s: float = 0.1) -> Pipeline:
+                   refractory_s: float = 0.1,
+                   track_peaks: bool = True) -> Pipeline:
+    """``track_peaks`` attaches a per-patient ``RPeakTracker`` carrying
+    BayeSlope stages 3-4 across windows — each ``WindowResult`` then gains a
+    ``peaks`` output (absolute samples confirmed by that window), identical
+    to the offline ``detect_rpeaks`` stream."""
     n = int(round(window_s * ECG_FS))
     refr = max(int(round(refractory_s * ECG_FS)), 1)
     spec = RPEAK_SPEC if window_s == RPEAK_WINDOW_S else WindowSpec(
@@ -96,29 +138,10 @@ def rpeak_pipeline(window_s: float = RPEAK_WINDOW_S,
         window_s=window_s, hop_s=window_s)
 
     def make_fn(fmt: str):
-        ar = Arith.make(fmt)
+        return _rpeak_batch_fn(fmt, peak_threshold, refr)
 
-        def one_window(sig: jax.Array) -> Dict[str, jax.Array]:
-            norm = rpeak_window_scores(ar, sig)
-            # candidate count: above threshold AND the maximum within the
-            # ±refractory neighbourhood (≥ towards the past, > towards the
-            # future — the same tie-break as the offline detector's greedy
-            # pass). A cheap per-window HR proxy, not the Bayesian stage.
-            is_peak = norm > peak_threshold
-            ones = jnp.ones((), jnp.bool_)
-            for d in range(1, refr + 1):
-                ge_past = jnp.concatenate(
-                    [jnp.broadcast_to(ones, (d,)), norm[d:] >= norm[:-d]])
-                gt_future = jnp.concatenate(
-                    [norm[:-d] > norm[d:], jnp.broadcast_to(ones, (d,))])
-                is_peak &= ge_past & gt_future
-            return {"scores": norm,
-                    "peak_count": jnp.sum(is_peak).astype(jnp.int32)}
-
-        def fn(arrays: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-            sig = arrays["ecg"][:, 0, :]            # (B, n) single lead
-            return jax.vmap(one_window)(sig)
-
-        return _jit_batch_fn(fn)
-
-    return Pipeline("rpeak", spec, make_fn, rpeak_window_op_counts(n))
+    make_tracker = (
+        (lambda patient: RPeakTracker(patient, fs=ECG_FS, window_samples=n))
+        if track_peaks else None)
+    return Pipeline("rpeak", spec, make_fn, rpeak_window_op_counts(n),
+                    make_tracker)

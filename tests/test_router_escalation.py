@@ -1,0 +1,228 @@
+"""PrecisionRouter quality-feedback escalation: the ladder state machine
+covered exhaustively over boundary-score observation sequences, ledger
+attribution sums, and the end-to-end payoff — escalation recovering beats
+that a static posit8 stream misses, at an audited energy cost."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.apps.metrics import rpeak_f1
+from repro.data.biosignals import ECG_FS, ecg_stream_signal
+from repro.stream import (EscalationPolicy, PrecisionRouter, StreamEngine,
+                          rpeak_pipeline, window_energy_nj)
+
+POL = EscalationPolicy(ladder=("posit8", "posit10", "posit16"),
+                       margin=0.08, hold_windows=3, hysteresis=2)
+NEAR = POL.margin / 2          # boundary_gap inside the margin
+CLEAN = POL.margin * 10        # comfortably outside
+
+
+def _router():
+    r = PrecisionRouter(escalation=POL)
+    r.pin("p", "posit8")
+    return r
+
+
+# ---------------------------------------------------------------------------
+# State machine, exhaustively
+# ---------------------------------------------------------------------------
+def _oracle(seq, base=0, top=2):
+    """Independent reference of the documented transition rules."""
+    rung, hold, clean = base, 0, 0
+    trace = []
+    for near, mid in seq:
+        if near:
+            clean = 0
+            if rung < top:
+                rung += 1
+            hold = POL.hold_windows
+        else:
+            clean += 1
+            if rung > base:
+                hold = max(hold - 1, 0)
+                if hold == 0 and clean >= POL.hysteresis and not mid:
+                    rung -= 1
+                    hold = POL.hold_windows if rung > base else 0
+        trace.append(rung)
+    return trace
+
+
+@pytest.mark.parametrize("length", [1, 2, 3])
+def test_escalation_machine_matches_oracle_exhaustively_short(length):
+    for seq in itertools.product([(False, False), (True, False),
+                                  (False, True), (True, True)],
+                                 repeat=length):
+        r = _router()
+        got = [r.observe("p", "rpeak", NEAR if near else CLEAN, mid)
+               for near, mid in seq]
+        want = [POL.ladder[k] for k in _oracle(seq)]
+        assert got == want, seq
+
+
+def test_escalation_machine_matches_oracle_exhaustively_deep():
+    """Every (near, mid_refractory) sequence of length 6 — 4096 runs —
+    against the independent oracle, plus global invariants."""
+    for seq in itertools.product([(False, False), (True, False),
+                                  (False, True), (True, True)],
+                                 repeat=6):
+        r = _router()
+        rungs = []
+        for near, mid in seq:
+            fmt = r.observe("p", "rpeak", NEAR if near else CLEAN, mid)
+            rungs.append(POL.ladder.index(fmt))
+        assert rungs == _oracle(seq), seq
+        # invariants: single-step moves, never below base, up only on near
+        prev = 0
+        for (near, mid), rung in zip(seq, rungs):
+            assert 0 <= rung <= 2
+            assert abs(rung - prev) <= 1
+            if rung > prev:
+                assert near
+            if rung < prev:
+                assert not near and not mid
+            prev = rung
+
+
+def test_never_deescalates_mid_refractory():
+    """The 'never de-escalate mid-refractory' edge: hold expired, clean
+    streak satisfied — but a boundary beat's refractory is open, so the
+    rung must not drop until it closes."""
+    r = _router()
+    assert r.observe("p", "rpeak", NEAR) == "posit10"
+    for _ in range(POL.hold_windows + POL.hysteresis + 3):
+        assert r.observe("p", "rpeak", CLEAN, mid_refractory=True) \
+            == "posit10"
+    # refractory closes → the very next clean window steps down
+    assert r.observe("p", "rpeak", CLEAN, mid_refractory=False) == "posit8"
+
+
+def test_escalation_holds_for_k_windows_and_needs_hysteresis():
+    r = _router()
+    assert r.observe("p", "rpeak", NEAR) == "posit10"
+    # hold_windows=3: the first two clean windows keep the rung even though
+    # hysteresis (2) is already satisfied by the second
+    assert r.observe("p", "rpeak", CLEAN) == "posit10"
+    assert r.observe("p", "rpeak", CLEAN) == "posit10"
+    assert r.observe("p", "rpeak", CLEAN) == "posit8"
+    # a near window mid-hold re-arms the hold AND the clean streak
+    assert r.observe("p", "rpeak", NEAR) == "posit10"
+    assert r.observe("p", "rpeak", NEAR) == "posit16"
+    st = r.escalation_state("p", "rpeak")
+    assert st.escalations == 3 and st.rung == 2 and st.base == 0
+
+
+def test_escalation_saturates_at_ladder_top_and_base():
+    r = _router()
+    for _ in range(5):
+        fmt = r.observe("p", "rpeak", NEAR)
+    assert fmt == "posit16"
+    assert r.escalation_state("p", "rpeak").rung == 2
+    for _ in range(50):
+        fmt = r.observe("p", "rpeak", CLEAN)
+    assert fmt == "posit8"
+    assert r.escalation_state("p", "rpeak").rung == 0
+
+
+def test_escalation_skips_off_ladder_patients_and_no_policy():
+    r = PrecisionRouter(escalation=POL)
+    r.pin("risky", "fp32")                  # not on the ladder
+    assert r.observe("risky", "rpeak", NEAR) == "fp32"
+    assert r.route("risky", "rpeak").fmt == "fp32"
+    r2 = PrecisionRouter()                  # no policy at all
+    assert r2.observe("p", "rpeak", NEAR) == "posit10"
+    assert r2.route("p", "rpeak").fmt == "posit10"
+
+
+def test_mid_stream_off_ladder_pin_overrides_escalation():
+    """A clinician pinning an escalated patient to fp32 must win immediately
+    — stale ladder state may not keep routing the old escalated format."""
+    r = _router()
+    assert r.observe("p", "rpeak", NEAR) == "posit10"
+    r.pin("p", "fp32")
+    assert r.route("p", "rpeak").fmt == "fp32"
+    assert r.observe("p", "rpeak", NEAR) == "fp32"
+    # pinning back onto the ladder starts from the new base, not old state
+    r.pin("p", "posit10")
+    assert r.route("p", "rpeak").fmt == "posit10"
+    assert r.observe("p", "rpeak", NEAR) == "posit16"
+    # an on-ladder re-pin ABOVE the current rung also wins immediately
+    r2 = _router()
+    r2.observe("p", "rpeak", NEAR)              # rung → posit10
+    r2.pin("p", "posit16")
+    assert r2.route("p", "rpeak").fmt == "posit16"
+
+
+def test_base_route_ignores_escalation():
+    r = _router()
+    r.observe("p", "rpeak", NEAR)
+    assert r.route("p", "rpeak").fmt == "posit10"
+    assert r.base_route("p", "rpeak").fmt == "posit8"
+
+
+# ---------------------------------------------------------------------------
+# Ledger attribution + the end-to-end payoff
+# ---------------------------------------------------------------------------
+def _stream_posit8(sig, escalate):
+    router = PrecisionRouter(
+        escalation=EscalationPolicy() if escalate else None)
+    eng = StreamEngine({"rpeak": rpeak_pipeline()}, router=router,
+                       max_batch=4)
+    eng.register_patient("frail", "rpeak", fmt="posit8")
+    W = 500
+    n = (len(sig) // W) * W
+    for k in range(0, n, W):
+        eng.ingest("frail", "rpeak", "ecg", sig[None, k: k + W])
+        eng.pump()                  # window-at-a-time: feedback reacts
+    eng.drain()
+    eng.finalize_patient("frail", "rpeak")
+    return eng
+
+
+def test_escalation_recovers_beats_static_posit8_misses():
+    """The acceptance case: at posit8 the tracker misses beats that the
+    quality-feedback escalation recovers, and the ledger prices the
+    recovery per patient."""
+    sig, true_r = ecg_stream_signal(20.0, seed=13, n_phases=4)
+    static = _stream_posit8(sig, escalate=False)
+    esc = _stream_posit8(sig, escalate=True)
+    _, _, rec_s = rpeak_f1(static.tracker_for("frail", "rpeak").peaks,
+                           true_r, ECG_FS)
+    _, _, rec_e = rpeak_f1(esc.tracker_for("frail", "rpeak").peaks,
+                           true_r, ECG_FS)
+    tp_s, tp_e = round(rec_s * len(true_r)), round(rec_e * len(true_r))
+    assert tp_e >= tp_s + 1, (tp_s, tp_e)
+    # static run: no escalation cost anywhere
+    assert static.ledger.escalation_summary() == {}
+    assert static.fleet_summary()["fleet"]["escalation_nj"] == 0.0
+    # escalated run: the per-patient ledger shows the nJ paid for recovery
+    att = esc.ledger.escalation_summary()["frail"]
+    assert att["windows"] >= 1 and att["extra_nj"] > 0
+
+
+def test_ledger_escalation_attribution_sums():
+    """Per-patient attribution, per-group columns, and the fleet rollup all
+    agree with a recomputation from the per-window format provenance."""
+    sig, _ = ecg_stream_signal(20.0, seed=13, n_phases=4)
+    eng = _stream_posit8(sig, escalate=True)
+    ops = rpeak_pipeline().ops_per_window
+    expected = 0.0
+    n_escalated = 0
+    for r in eng.results_for("frail", "rpeak"):
+        if r.fmt != "posit8":
+            n_escalated += 1
+            expected += (window_energy_nj(ops, r.fmt)
+                         - window_energy_nj(ops, "posit8"))
+    assert n_escalated >= 1
+    att = eng.ledger.escalation_summary()["frail"]
+    assert att["windows"] == n_escalated
+    assert att["extra_nj"] == pytest.approx(expected)
+    s = eng.fleet_summary()
+    assert s["fleet"]["escalated_windows"] == n_escalated
+    assert s["fleet"]["escalation_nj"] == pytest.approx(expected)
+    group_esc = sum(v["escalation_nj"] for k, v in s.items()
+                    if k != "fleet")
+    assert group_esc == pytest.approx(expected)
+    # width-aware posit energy: the escalated formats bill more per window
+    assert window_energy_nj(ops, "posit8") < window_energy_nj(ops, "posit10")
+    assert window_energy_nj(ops, "posit10") < window_energy_nj(ops, "posit16")

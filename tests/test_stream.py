@@ -272,6 +272,40 @@ def test_auto_pump_keeps_ragged_remainders_pending(forest):
     assert [r.widx for r in eng.results_for("p", "cough")] == [0, 1, 2]
 
 
+# ---------------------------------------------------------------------------
+# stream_bench --json schema: the committed BENCH_stream.json is the tracked
+# perf baseline — its key structure must not drift silently from what the
+# benchmark writes today.
+# ---------------------------------------------------------------------------
+def test_stream_bench_json_schema_matches_committed(forest, tmp_path):
+    import json
+    import os
+    import sys
+    bench_dir = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+    sys.path.insert(0, bench_dir)
+    try:
+        import stream_bench
+    finally:
+        sys.path.remove(bench_dir)
+    out = tmp_path / "bench.json"
+    doc = stream_bench.run(patients=2, windows=1, max_batch=2, smoke=True,
+                           seed=0, json_path=str(out), forest=forest)
+    with open(os.path.join(bench_dir, "..", "BENCH_stream.json")) as f:
+        committed = json.load(f)
+    assert json.loads(out.read_text()) == doc
+    # top-level, config, wall and escalation key sets are pinned
+    assert set(doc) == set(committed)
+    for section in ("config", "wall", "escalation"):
+        assert set(doc[section]) == set(committed[section]), section
+    # every group row (fleet and task/fmt alike) carries the same metrics
+    for name, row in list(doc["groups"].items()) + \
+            list(committed["groups"].items()):
+        want = (set(committed["groups"]["fleet"]) if name == "fleet"
+                else set(next(v for k, v in committed["groups"].items()
+                              if k != "fleet")))
+        assert set(row) == want, name
+
+
 def test_engine_per_patient_format_override(forest):
     eng = StreamEngine({"cough": cough_pipeline(forest)}, max_batch=4)
     a, i, _ = cough_stream_signals(2, seed=9)
