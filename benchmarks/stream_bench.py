@@ -7,18 +7,30 @@ per-format throughput (windows/sec) and model energy (nJ/window).
   python benchmarks/stream_bench.py --patients 128 --windows 10
   python benchmarks/stream_bench.py --json       # + BENCH_stream.json
   python benchmarks/stream_bench.py --escalate   # quality-feedback routing
+  python benchmarks/stream_bench.py --transport tcp --smoke --stall 1
+                                                 # fleet soak over localhost
+                                                 # TCP + a stalled patient
 
 Output follows benchmarks/run.py conventions: ``name,us_per_call,derived``
 CSV rows, one per (task, format) group plus a fleet rollup.  ``--json``
 additionally writes a machine-readable ``BENCH_stream.json`` (windows/sec,
-µs/window, nJ/window per task×format, escalation-rate stats) so the perf
-trajectory is tracked across PRs; ``tests/test_stream.py`` pins its schema
-against the committed copy.  ``--escalate`` arms the XBioSiP-style
-precision-escalation policy on the R-peak posit8 arm, so the JSON's
-``escalation`` block reports per-patient extra nJ and the fleet escalation
-rate.
+µs/window, nJ/window per task×format, escalation-rate stats, and the
+``transport`` block: frame/gap/dup/eviction counters, end-to-end latency
+percentiles, result-queue drops) so the perf trajectory is tracked across
+PRs; ``tests/test_stream.py`` pins its schema against the committed copy.
+
+``--transport`` selects the ingest path: ``inproc`` (chunks straight into
+the engine — the pre-PR-4 driver and the perf baseline), ``loopback``
+(every chunk through the framed wire protocol byte codec + SessionManager,
+no sockets), or ``tcp`` (a real asyncio ``IngestServer`` on localhost with
+one client connection per patient — the fleet soak configuration).
+``--stall N`` silences the last N ECG patients mid-stream so the
+stall-timeout eviction policy runs and its counters land in the JSON.
+Results drain through the ``repro.ingest.Supervisor`` bounded queue in all
+modes — the engine backlog stays flat no matter how long the soak runs.
 """
 import argparse
+import asyncio
 import json
 import os
 import sys
@@ -63,8 +75,9 @@ def build_fleet(n_patients: int, n_windows: int, mixed: bool, rng):
     return queues, pins
 
 
-def stream_fleet(engine, queues, rng):
-    """Ragged round-robin arrival across every (patient, modality) stream."""
+def stream_fleet(engine, queues, rng, supervisor=None):
+    """Ragged round-robin arrival across every (patient, modality) stream,
+    draining dispatched results through the supervisor as traffic flows."""
     # deep-copy the chunk lists: a warmup pass must not drain the real ones
     queues = [(pid, task, mod, list(chunks))
               for pid, task, mod, chunks in queues]
@@ -75,21 +88,87 @@ def stream_fleet(engine, queues, rng):
         engine.ingest(pid, task, mod, chunks.pop(0))
         if not chunks:
             live.pop(k)
+        if supervisor is not None:
+            supervisor.poll()
     engine.drain()
     engine.finalize_all()
+    if supervisor is not None:
+        supervisor.poll()
+
+
+def _build_simulator(patients, windows, mixed, stall, seed):
+    from repro.ingest import FleetSimulator
+    n_cough = patients // 2
+    n_ecg = patients - n_cough
+    if stall > n_ecg:
+        raise ValueError(f"--stall {stall} exceeds the {n_ecg} ECG patients")
+    # silence the LAST `stall` ECG patients after 2 DATA frames: enough for
+    # a delivered prefix, early enough that eviction frees real state
+    stall_after = {f"ecg-{n_ecg - 1 - k:03d}": 2 for k in range(stall)}
+    return FleetSimulator(patients, windows, seed=seed, mixed=mixed,
+                          dup_rate=0.02, defer_rate=0.02,
+                          stall_after=stall_after)
+
+
+def _stream_transport(engine, supervisor, sim, transport, stall_timeout_s,
+                      arrival_seed):
+    """Drive one measured pass over the loopback or TCP transport; returns
+    after every session is closed (BYE or evicted)."""
+    from repro.ingest import IngestServer, SessionManager
+
+    if transport == "loopback":
+        sm = SessionManager(engine, stall_timeout_s=stall_timeout_s)
+        sim.run_loopback(sm, arrival_seed=arrival_seed)
+        supervisor.poll()
+        # loopback has no wall clock to wait on: force the reap horizon
+        sm.reap(now=sm.clock() + stall_timeout_s + 1.0)
+        supervisor.poll()
+        return
+
+    async def tcp_main():
+        sm = SessionManager(engine, stall_timeout_s=stall_timeout_s)
+        sim.pin_all(engine)
+        async with IngestServer(sm, port=0,
+                                reap_interval_s=stall_timeout_s / 4) as srv:
+            done = [False]
+            pump = asyncio.ensure_future(
+                supervisor.run_async(0.005, stop=lambda: done[0]))
+            await sim.run_tcp("127.0.0.1", srv.port,
+                              arrival_seed=arrival_seed)
+            # stalled patients close only via the reaper: wait for it
+            deadline = time.perf_counter() + 4 * stall_timeout_s + 10.0
+            while not sm.all_closed():
+                if time.perf_counter() > deadline:
+                    raise TimeoutError(
+                        f"sessions still open past the reap deadline: "
+                        f"{sm.open_sessions()}")
+                await asyncio.sleep(0.02)
+            done[0] = True
+            await pump
+        supervisor.poll()
+
+    asyncio.run(tcp_main())
 
 
 def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
         homogeneous: bool = False, escalate: bool = False, seed: int = 0,
-        json_path=None, forest=None):
+        json_path=None, forest=None, transport: str = "inproc",
+        stall: int = 0, stall_timeout_s: float = 1.5,
+        pad_policy=None):
     """Build and stream the fleet; returns the machine-readable result doc
     (and writes it to ``json_path`` when given)."""
     import jax
 
     from repro.core.arith import get_round_backend
+    from repro.ingest import Supervisor
     from repro.stream import (EscalationPolicy, PrecisionRouter,
                               StreamEngine, cough_pipeline, rpeak_pipeline)
 
+    if transport not in ("inproc", "loopback", "tcp"):
+        raise ValueError(f"unknown transport {transport!r}")
+    if stall and transport == "inproc":
+        raise ValueError("--stall needs a transport (loopback or tcp): "
+                         "the in-process driver has no stall clock")
     if forest is None:
         t0 = time.perf_counter()
         forest = build_forest()
@@ -97,8 +176,13 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
               file=sys.stderr)
 
     rng = np.random.default_rng(seed)
-    queues, pins = build_fleet(patients, windows,
-                               mixed=not homogeneous, rng=rng)
+    mixed = not homogeneous
+    sim = None
+    if transport == "inproc":
+        queues, pins = build_fleet(patients, windows, mixed=mixed, rng=rng)
+    else:
+        sim = _build_simulator(patients, windows, mixed, stall, seed)
+        queues, pins = None, sim.pins
     engine = StreamEngine({"cough": cough_pipeline(forest),
                            "rpeak": rpeak_pipeline()},
                           router=PrecisionRouter(
@@ -106,41 +190,66 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
                               escalation=EscalationPolicy() if escalate
                               else None),
                           max_batch=max_batch,
-                          pad_to_max=True)  # one compiled shape per arm
+                          # one compiled shape per arm unless overridden
+                          pad_policy=pad_policy or "max")
+    supervisor = Supervisor(engine, capacity=4096)
 
     if not smoke:  # warm the compile caches, then measure steady state
         t0 = time.perf_counter()
-        stream_fleet(engine, queues, np.random.default_rng(seed + 1))
-        print(f"# warmup pass in {time.perf_counter() - t0:.1f}s",
-              file=sys.stderr)
+        if transport == "inproc":
+            stream_fleet(engine, queues, np.random.default_rng(seed + 1),
+                         supervisor)
+        else:
+            sim.run_inproc(engine, arrival_seed=seed + 1)
+            supervisor.poll()
+        print(f"# warmup pass in {time.perf_counter() - t0:.1f}s "
+              f"(pad strategy: {engine.pad_strategy()})", file=sys.stderr)
         engine.reset()
+        supervisor = Supervisor(engine, capacity=4096)
 
     t0 = time.perf_counter()
-    stream_fleet(engine, queues, np.random.default_rng(seed + 2))
+    if transport == "inproc":
+        stream_fleet(engine, queues, np.random.default_rng(seed + 2),
+                     supervisor)
+    else:
+        _stream_transport(engine, supervisor, sim, transport,
+                          stall_timeout_s, arrival_seed=seed + 2)
     wall = time.perf_counter() - t0
 
-    n = len(engine.results)
+    n = supervisor.total_windows
     expect = patients * windows  # every patient emits each window
-    assert n == expect, f"windows processed {n} != expected {expect}"
+    if stall == 0:
+        assert n == expect, f"windows processed {n} != expected {expect}"
+    else:  # stalled patients deliver only a prefix
+        assert (patients - stall) * windows <= n <= expect, (n, expect)
     groups = {}
     for key, row in engine.fleet_summary().items():
         us = 1e6 / row["windows_per_s"] if row["windows_per_s"] else 0.0
         groups[key] = {"us_per_window": us, **row}
     esc = engine.ledger.escalation_summary()
     esc_windows = sum(int(d["windows"]) for d in esc.values())
+    tele = supervisor.telemetry()
     doc = {
         "benchmark": "stream_bench",
         "config": {"patients": patients, "windows": windows,
                    "max_batch": max_batch, "smoke": smoke,
                    "homogeneous": homogeneous, "escalate": escalate,
                    "seed": seed, "backend": jax.default_backend(),
-                   "round_backend": get_round_backend()},
+                   "round_backend": get_round_backend(),
+                   "transport": transport, "stall": stall,
+                   "pad_strategy": engine.pad_strategy()},
         "groups": groups,
         "escalation": {
             "patients": esc,
             "windows_escalated": esc_windows,
             "extra_nj": sum(d["extra_nj"] for d in esc.values()),
             "rate": esc_windows / n if n else 0.0,
+        },
+        "transport": {
+            "mode": transport,
+            "counters": engine.ledger.transport_summary()["fleet"],
+            "latency_ms": tele["latency_ms"],
+            "result_queue": tele["queue"],
         },
         "wall": {"elapsed_s": wall, "windows": n,
                  "end_to_end_windows_per_s": n / wall},
@@ -168,6 +277,22 @@ def main():
     ap.add_argument("--escalate", action="store_true",
                     help="arm the quality-feedback precision escalation "
                          "policy (posit8→posit10→posit16)")
+    ap.add_argument("--transport", choices=("inproc", "loopback", "tcp"),
+                    default="inproc",
+                    help="ingest path: in-process chunks (default), framed "
+                         "wire protocol without sockets, or a live asyncio "
+                         "TCP server on localhost")
+    ap.add_argument("--stall", type=int, default=0,
+                    help="silence this many ECG patients mid-stream so the "
+                         "stall-timeout eviction policy fires (transport "
+                         "modes only)")
+    ap.add_argument("--stall-timeout", type=float, default=1.5,
+                    metavar="S", help="session stall timeout in seconds "
+                    "(transport modes; default 1.5)")
+    ap.add_argument("--pad-policy", choices=("max", "pow2", "auto"),
+                    default=None,
+                    help="dispatch padding strategy (default max; auto "
+                         "consults the ledger's padding ratio after warmup)")
     ap.add_argument("--json", nargs="?", const="BENCH_stream.json",
                     default=None, metavar="PATH",
                     help="also write machine-readable results (default "
@@ -185,7 +310,10 @@ def main():
 
     doc = run(patients, windows, max_batch, smoke=args.smoke,
               homogeneous=args.homogeneous, escalate=args.escalate,
-              seed=args.seed, json_path=args.json)
+              seed=args.seed, json_path=args.json,
+              transport=args.transport, stall=args.stall,
+              stall_timeout_s=args.stall_timeout,
+              pad_policy=args.pad_policy)
     for key, row in doc["groups"].items():
         print(f"stream_bench/{key},{row['us_per_window']:.0f},"
               f"windows={row['windows']};"
@@ -201,6 +329,15 @@ def main():
     print(f"stream_bench/escalation,0,"
           f"windows_escalated={esc['windows_escalated']};"
           f"rate={esc['rate']:.3f};extra_nj={esc['extra_nj']:.1f}")
+    tr = doc["transport"]
+    print(f"stream_bench/transport,0,mode={tr['mode']};"
+          f"frames={tr['counters']['frames']};"
+          f"dups={tr['counters']['dup_frames']};"
+          f"gaps={tr['counters']['gap_events']};"
+          f"evictions={tr['counters']['evictions']};"
+          f"latency_p50_ms={tr['latency_ms']['p50']:.2f};"
+          f"latency_p99_ms={tr['latency_ms']['p99']:.2f};"
+          f"queue_dropped={tr['result_queue']['dropped']}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,11 @@ climbs posit8 → posit10 → posit16 for the next windows, recovers beats the
 static posit8 stream misses, and the ledger bills the extra nJ to the
 escalation column.
 
+Results drain through the ``repro.ingest.Supervisor`` bounded queue — the
+pattern long-running callers should copy: the engine's backlog stays flat
+however long the stream runs, and the supervisor carries the per-patient
+windows/sec + latency telemetry.
+
   PYTHONPATH=src python examples/stream_demo.py
 """
 import os
@@ -28,6 +33,7 @@ from repro.apps.cough import train_reference_forest
 from repro.apps.metrics import rpeak_f1
 from repro.data.biosignals import (ECG_FS, cough_stream_signals,
                                    ecg_stream_signal, ragged_chunks)
+from repro.ingest import Supervisor
 from repro.stream import (EscalationPolicy, PrecisionRouter, StreamEngine,
                           cough_pipeline, rpeak_pipeline)
 
@@ -47,14 +53,17 @@ def build_engine(forest, escalate):
 def stream_frail_only(forest, sig, escalate):
     """The posit8 patient alone, window-at-a-time (feedback reacts)."""
     eng = build_engine(forest, escalate)
+    sup = Supervisor(eng)
     eng.register_patient("ecg-frail", "rpeak", fmt="posit8")
     W = 500
     for k in range(0, (len(sig) // W) * W, W):
         eng.ingest("ecg-frail", "rpeak", "ecg", sig[None, k: k + W])
         eng.pump()
+        sup.poll()
     eng.drain()
     eng.finalize_all()
-    return eng
+    sup.poll()
+    return eng, sup
 
 
 def main():
@@ -62,6 +71,7 @@ def main():
     forest = train_reference_forest(64, 7, n_trees=8, depth=5)
 
     engine = build_engine(forest, escalate=True)
+    sup = Supervisor(engine, capacity=256)
     engine.register_patient("cough-hi-risk", "cough", fmt="fp32")
     engine.register_patient("ecg-frail", "rpeak", fmt="posit8")
 
@@ -96,18 +106,20 @@ def main():
         if not chunks:
             live.pop(j)
         engine.pump()     # dispatch eagerly so escalation feedback reacts
+        sup.poll()        # bounded drain: engine backlog stays flat
     engine.drain()
     engine.finalize_all()
+    sup.poll()
 
     print("\nper-patient timelines:")
     for pid in ("cough-a", "cough-b", "cough-hi-risk"):
-        rs = engine.results_for(pid, "cough")
+        rs = sup.results_for(pid, "cough")
         probs = " ".join(f"{float(r.outputs['p_cough']):.2f}" for r in rs)
         truth = " ".join(str(int(v)) for v in labels[pid])
         print(f"  {pid:14s} [{rs[0].fmt:7s}] P(cough) per window: {probs}"
               f"   (truth: {truth})")
     for pid in ("ecg-rest", "ecg-jog", "ecg-sprint", "ecg-frail"):
-        rs = engine.results_for(pid, "rpeak")
+        rs = sup.results_for(pid, "rpeak")
         fmts = "→".join(dict.fromkeys(r.fmt for r in rs))  # format journey
         peaks = engine.tracker_for(pid, "rpeak").peaks
         dur_s = len(rs) * 2.0
@@ -117,15 +129,15 @@ def main():
               f"  sensitivity {rec:.2f}")
 
     print("\nescalation storyline (ecg-frail @ posit8, same record twice):")
-    static = stream_frail_only(forest, frail_sig, escalate=False)
-    esc = stream_frail_only(forest, frail_sig, escalate=True)
+    static, _ = stream_frail_only(forest, frail_sig, escalate=False)
+    esc, esc_sup = stream_frail_only(forest, frail_sig, escalate=True)
     p_static = static.tracker_for("ecg-frail", "rpeak").peaks
     p_esc = esc.tracker_for("ecg-frail", "rpeak").peaks
     _, _, rec_s = rpeak_f1(p_static, frail_r, ECG_FS)
     _, _, rec_e = rpeak_f1(p_esc, frail_r, ECG_FS)
     tp_s, tp_e = round(rec_s * len(frail_r)), round(rec_e * len(frail_r))
     journey = "→".join(dict.fromkeys(
-        r.fmt for r in esc.results_for("ecg-frail", "rpeak")))
+        r.fmt for r in esc_sup.results_for("ecg-frail", "rpeak")))
     att = esc.ledger.escalation_summary().get("ecg-frail",
                                               {"windows": 0, "extra_nj": 0.0})
     base_nj = static.fleet_summary()["fleet"]["total_nj"]
@@ -149,6 +161,13 @@ def main():
         for pid, d in esc_fleet.items():
             print(f"  {pid:14s} windows={d['windows']:3.0f} "
                   f"extra_nJ={d['extra_nj']:.1f}")
+
+    tele = sup.telemetry()
+    q, lat = tele["queue"], tele["latency_ms"]
+    print(f"\nsupervisor drain: {q['total_windows']} windows through a "
+          f"bounded queue (capacity {q['capacity']}, dropped {q['dropped']})"
+          f"; ready→result latency p50 {lat['p50']:.1f} ms / "
+          f"p99 {lat['p99']:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Asynchronous multi-patient ingest: the transport layer in front of the
+streaming runtime.
+
+``repro.stream`` assumes a polite caller — in-order chunks, one process, a
+drained result list.  ``repro.ingest`` is the layer that faces an actual
+fleet: a framed, versioned wire protocol (``protocol``), an asyncio TCP
+server with per-connection backpressure (``server``), session management
+that restores exactly-once in-order delivery from a faulty transport and
+evicts stalled patients on a timeout (``sessions``), a bounded-queue result
+supervisor publishing per-patient telemetry (``supervisor``), and a fleet
+replay client for soak runs and parity tests (``simulator``).
+"""
+from .protocol import (BYE, DATA, HELLO, Frame, FrameDecoder, ProtocolError,
+                       bye, data, decode_body, encode_frame, encode_stream,
+                       hello, loopback)
+from .server import IngestServer
+from .sessions import ModalityState, PatientSession, SessionManager
+from .simulator import FleetSimulator, PatientPlan
+from .supervisor import Supervisor
+
+__all__ = [
+    "BYE", "DATA", "HELLO", "FleetSimulator", "Frame", "FrameDecoder",
+    "IngestServer", "ModalityState", "PatientPlan", "PatientSession",
+    "ProtocolError", "SessionManager", "Supervisor", "bye", "data",
+    "decode_body", "encode_frame", "encode_stream", "hello", "loopback",
+]

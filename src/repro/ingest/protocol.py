@@ -1,0 +1,246 @@
+"""Framed wire protocol for wearable sensor transport.
+
+One stream of length-prefixed binary frames per connection; every frame is
+self-describing (patient, task, modality, sequence number ride in the
+header), so the server needs no per-connection parser state and a client may
+resume on a fresh connection mid-stream.  Layout, all fields big-endian:
+
+    u32  body_len                 (length prefix, excludes itself)
+    body:
+      2s   magic  = b"PH"
+      u8   version = 1
+      u8   frame type (HELLO=1, DATA=2, BYE=3)
+      str  patient                (u8 length + utf-8 bytes)
+      str  task
+      str  modality               ("" for HELLO/BYE)
+      u32  seq                    (per-(patient, modality) sample-frame
+                                   counter; 0 for HELLO/BYE)
+      u8   channels
+      u8   dtype code             (0 = float32, 1 = float64)
+      u32  n_samples
+      ...  payload                (channels × n_samples row-major samples)
+      u32  crc32 of everything above in the body
+
+``HELLO`` opens (or re-opens, after a disconnect) a patient session; ``BYE``
+declares a clean end of stream, letting the server finalize the patient's
+tracker immediately instead of waiting for the stall reaper.  ``DATA``
+carries one in-order chunk of one modality.  The decoder is incremental —
+feed it arbitrary byte splits (the TCP reader does) and it yields every
+complete frame — and validates magic, version, CRC, and a frame-size bound
+before any payload is materialized.
+
+The *loopback codec* (`encode_stream` + `FrameDecoder`) runs the identical
+byte path without sockets: deterministic, event-loop-free, and what the
+fast-lane transport tests and ``stream_bench --transport loopback`` use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+from typing import Iterable, Iterator, List, Optional
+
+import numpy as np
+
+MAGIC = b"PH"
+VERSION = 1
+
+HELLO = 1
+DATA = 2
+BYE = 3
+_TYPES = (HELLO, DATA, BYE)
+
+# corrupt length prefixes must not allocate gigabytes: one frame is bounded
+# by a few seconds of the densest modality (16 kHz × 2ch float64 ≈ 256 KiB/s)
+MAX_FRAME_BYTES = 1 << 24
+
+_DTYPES = {0: np.dtype(">f4"), 1: np.dtype(">f8")}
+_DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.float64): 1}
+
+
+class ProtocolError(ValueError):
+    """Malformed frame: bad magic/version/type, CRC mismatch, oversize."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    """One decoded wire frame (see module docstring for the layout)."""
+
+    ftype: int
+    patient: str
+    task: str
+    modality: str = ""
+    seq: int = 0
+    payload: Optional[np.ndarray] = None  # (channels, n_samples) float
+
+    def nbytes(self) -> int:
+        return self.payload.nbytes if self.payload is not None else 0
+
+
+def hello(patient: str, task: str) -> Frame:
+    return Frame(HELLO, patient, task)
+
+
+def bye(patient: str, task: str) -> Frame:
+    return Frame(BYE, patient, task)
+
+
+def data(patient: str, task: str, modality: str, seq: int,
+         samples: np.ndarray) -> Frame:
+    return Frame(DATA, patient, task, modality, seq,
+                 np.atleast_2d(np.asarray(samples)))
+
+
+def _pack_str(s: str) -> bytes:
+    b = s.encode("utf-8")
+    if len(b) > 255:
+        raise ProtocolError(f"string field too long ({len(b)} bytes)")
+    return struct.pack(">B", len(b)) + b
+
+
+def encode_frame(frame: Frame) -> bytes:
+    """Serialize one frame, length prefix included."""
+    if frame.ftype not in _TYPES:
+        raise ProtocolError(f"unknown frame type {frame.ftype}")
+    if frame.ftype == DATA:
+        payload = np.atleast_2d(np.asarray(frame.payload))
+        code = _DTYPE_CODES.get(payload.dtype)
+        if code is None:
+            payload = payload.astype(np.float64)
+            code = 1
+        channels, n = payload.shape
+        raw = payload.astype(_DTYPES[code].newbyteorder(">")).tobytes()
+    else:
+        code, channels, n, raw = 0, 0, 0, b""
+    body = b"".join([
+        MAGIC, struct.pack(">BB", VERSION, frame.ftype),
+        _pack_str(frame.patient), _pack_str(frame.task),
+        _pack_str(frame.modality),
+        struct.pack(">IBBI", frame.seq, channels, code, n),
+        raw,
+    ])
+    body += struct.pack(">I", zlib.crc32(body) & 0xFFFFFFFF)
+    if len(body) > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame of {len(body)} bytes exceeds "
+                            f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    return struct.pack(">I", len(body)) + body
+
+
+def encode_stream(frames: Iterable[Frame]) -> bytes:
+    """The loopback codec's send half: frames → one contiguous byte stream."""
+    return b"".join(encode_frame(f) for f in frames)
+
+
+def _unpack_str(body: bytes, pos: int) -> tuple:
+    k = body[pos]
+    pos += 1
+    return body[pos: pos + k].decode("utf-8"), pos + k
+
+
+def decode_body(body: bytes) -> Frame:
+    """Decode one frame body (length prefix already stripped)."""
+    if len(body) < 4 + 2 + 2:
+        raise ProtocolError(f"truncated frame body ({len(body)} bytes)")
+    crc_got = struct.unpack(">I", body[-4:])[0]
+    crc_want = zlib.crc32(body[:-4]) & 0xFFFFFFFF
+    if crc_got != crc_want:
+        raise ProtocolError(
+            f"CRC mismatch (got {crc_got:#010x}, want {crc_want:#010x})")
+    if body[:2] != MAGIC:
+        raise ProtocolError(f"bad magic {body[:2]!r}")
+    version, ftype = body[2], body[3]
+    if version != VERSION:
+        raise ProtocolError(f"unsupported protocol version {version}")
+    if ftype not in _TYPES:
+        raise ProtocolError(f"unknown frame type {ftype}")
+    try:
+        pos = 4
+        patient, pos = _unpack_str(body, pos)
+        task, pos = _unpack_str(body, pos)
+        modality, pos = _unpack_str(body, pos)
+        seq, channels, code, n = struct.unpack(">IBBI", body[pos: pos + 10])
+        pos += 10
+    except (IndexError, UnicodeDecodeError, struct.error) as e:
+        # CRC-valid but lying length bytes (a buggy encoder, not line
+        # noise) must still surface as a protocol error, not IndexError
+        raise ProtocolError(f"malformed frame body: {e}") from None
+    payload = None
+    if ftype == DATA:
+        dt = _DTYPES.get(code)
+        if dt is None:
+            raise ProtocolError(f"unknown dtype code {code}")
+        want = channels * n * dt.itemsize
+        raw = body[pos: pos + want]
+        if len(raw) != want or pos + want != len(body) - 4:
+            raise ProtocolError(
+                f"payload size mismatch ({len(body) - 4 - pos} bytes for "
+                f"{channels}×{n} {dt.name})")
+        payload = np.frombuffer(raw, dt).reshape(channels, n)
+        payload = payload.astype(dt.newbyteorder("="))
+    return Frame(ftype, patient, task, modality, seq, payload)
+
+
+class FrameDecoder:
+    """Incremental frame parser: feed arbitrary byte splits, get frames.
+
+    One instance per connection (or per loopback stream).  A malformed
+    frame poisons the decoder, but frames decoded BEFORE the corruption
+    point are still returned from that ``feed`` call — they arrived intact
+    and must not become collateral of a later torn frame; the stashed
+    ``ProtocolError`` raises on the NEXT call, and the transport layer then
+    drops the connection.  Sequencing state lives in the
+    ``SessionManager``, not here, so a reconnect recovers.
+    """
+
+    def __init__(self):
+        self._buf = bytearray()
+        self._err: Optional[ProtocolError] = None
+
+    def feed(self, chunk: bytes) -> List[Frame]:
+        if self._err is not None:
+            raise self._err
+        self._buf.extend(chunk)
+        out: List[Frame] = []
+        try:
+            while len(self._buf) >= 4:
+                body_len = struct.unpack(">I", bytes(self._buf[:4]))[0]
+                if body_len > MAX_FRAME_BYTES:
+                    raise ProtocolError(
+                        f"frame length {body_len} exceeds "
+                        f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+                if len(self._buf) < 4 + body_len:
+                    break
+                body = bytes(self._buf[4: 4 + body_len])
+                del self._buf[: 4 + body_len]
+                out.append(decode_body(body))
+        except ProtocolError as e:
+            self._err = e   # deliver the intact prefix; poisoned hereafter
+        return out
+
+    @property
+    def poisoned(self) -> bool:
+        return self._err is not None
+
+    @property
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+
+def loopback(frames: Iterable[Frame], chunk_bytes: int = 0,
+             rng: Optional[np.random.Generator] = None) -> Iterator[Frame]:
+    """Round-trip frames through the byte codec, optionally re-split into
+    ``chunk_bytes``-sized (or rng-ragged) pieces — the socketless transport.
+    """
+    wire = encode_stream(frames)
+    dec = FrameDecoder()
+    if chunk_bytes <= 0 and rng is None:
+        yield from dec.feed(wire)
+        return
+    if chunk_bytes <= 0:
+        chunk_bytes = 4096  # rng-only mode: ragged splits up to this bound
+    pos = 0
+    while pos < len(wire):
+        k = (int(rng.integers(1, chunk_bytes + 1)) if rng is not None
+             else chunk_bytes)
+        yield from dec.feed(wire[pos: pos + k])
+        pos += k

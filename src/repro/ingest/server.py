@@ -1,0 +1,134 @@
+"""Asyncio TCP ingest server: many concurrent patient connections → one
+``SessionManager``.
+
+Each connection runs a reader coroutine: bytes → ``FrameDecoder`` →
+``SessionManager.on_frame``.  Frames are self-describing, so a connection
+carries any mix of patients/modalities and a patient may drop and resume on
+a fresh connection (the session's sequencing state lives in the manager,
+not the connection).  A malformed frame poisons only its own connection.
+
+Backpressure is per-connection and explicit: after each socket read the
+handler compares the manager's dispatch backlog (windows awaiting dispatch
+— reorder-held frames are deliberately excluded: only these same readers
+can fill their gaps, so counting them could stall the fleet against
+itself) against ``high_watermark`` and suspends further reads, for at most
+``max_suspend_s``, until it drains — TCP flow control then pushes back on
+the client.  The engine's jit dispatch runs synchronously in the event
+loop (windows are the unit of work; a dispatch is
+microseconds-to-milliseconds), so "drains" means the supervisor/pump task
+got a turn.
+
+A periodic reaper task applies the ``SessionManager`` stall-timeout
+eviction policy, so dead radios release their staged state without any
+client cooperation.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Optional
+
+from .protocol import FrameDecoder, ProtocolError
+from .sessions import SessionManager
+
+
+class IngestServer:
+    def __init__(self, sessions: SessionManager, host: str = "127.0.0.1",
+                 port: int = 0, high_watermark: int = 4096,
+                 reap_interval_s: Optional[float] = None,
+                 read_bytes: int = 1 << 16, max_suspend_s: float = 1.0):
+        """``port=0`` binds an ephemeral port (read it back from ``.port``
+        after ``start``); ``reap_interval_s`` defaults to a quarter of the
+        session manager's stall timeout."""
+        self.sessions = sessions
+        self.host = host
+        self.port = int(port)
+        self.high_watermark = int(high_watermark)
+        self.reap_interval_s = (
+            float(reap_interval_s) if reap_interval_s is not None
+            else sessions.stall_timeout_s / 4.0)
+        self.read_bytes = int(read_bytes)
+        self.max_suspend_s = float(max_suspend_s)
+        self.connections_total = 0
+        self.protocol_errors = 0
+        self.session_errors = 0   # non-protocol failures (engine/session)
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._reaper: Optional[asyncio.Task] = None
+
+    async def start(self) -> None:
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._reaper = asyncio.ensure_future(self._reap_loop())
+
+    async def stop(self) -> None:
+        if self._reaper is not None:
+            self._reaper.cancel()
+            try:
+                await self._reaper
+            except asyncio.CancelledError:
+                pass
+            self._reaper = None
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    async def __aenter__(self) -> "IngestServer":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        self.connections_total += 1
+        dec = FrameDecoder()
+        try:
+            while True:
+                chunk = await reader.read(self.read_bytes)
+                if not chunk:
+                    # EOF: the session stays open for a reconnect — but a
+                    # stream that ended on a torn frame is still an error
+                    if dec.poisoned:
+                        self.protocol_errors += 1
+                    break
+                try:
+                    frames = dec.feed(chunk)
+                except ProtocolError:
+                    self.protocol_errors += 1
+                    break   # drop the connection; sessions survive
+                try:
+                    for frame in frames:
+                        self.sessions.on_frame(frame)
+                except ProtocolError:       # task change, reorder-cap, …
+                    self.protocol_errors += 1
+                    break
+                except Exception:
+                    # engine/session failure (unknown task, dispatch error
+                    # surfacing through auto-pump): contain it to this
+                    # connection instead of killing the reader task silently
+                    self.session_errors += 1
+                    break
+                waited = 0.0
+                while (self.sessions.dispatch_backlog()
+                       > self.high_watermark):
+                    # suspend this reader until the dispatch backlog
+                    # drains; TCP flow control propagates the stall to the
+                    # client.  Bounded: a pathological backlog degrades to
+                    # slower reads, never a permanent fleet-wide stall.
+                    if waited >= self.max_suspend_s:
+                        break
+                    await asyncio.sleep(0.001)
+                    waited += 0.001
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _reap_loop(self) -> None:
+        while True:
+            await asyncio.sleep(self.reap_interval_s)
+            self.sessions.reap()

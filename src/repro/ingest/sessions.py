@@ -1,0 +1,216 @@
+"""Session management: the exactly-once gate between transport and engine.
+
+The ``StreamEngine``/``WindowDispatcher`` contract is strict — chunks
+in-order within one (patient, modality) stream, each sample exactly once —
+while a real transport delivers duplicates (retransmissions), reorderings
+(multi-path, ARQ refills), and silence (dead radios).  ``SessionManager``
+sits between them:
+
+* per-(patient, modality) sequence tracking: the next expected ``seq``,
+  a bounded reorder buffer holding early frames until the gap fills,
+  duplicate drop, and gap/dup/reorder accounting into the engine's
+  ``EnergyLedger`` transport column;
+* session lifecycle: ``HELLO`` opens (or, after a disconnect, resumes —
+  the sequence state survives the connection) and ``BYE`` closes cleanly,
+  finalizing the patient's tracker through the engine;
+* a **stall-timeout eviction policy**: a patient with no frame activity
+  for ``stall_timeout_s`` is evicted — its complete pending windows are
+  flushed through the pipeline, its tracker finalized
+  (``StreamEngine.evict_patient``), its staged window slices freed, and the
+  eviction counted in the ledger.  Frames arriving after eviction are
+  dropped and counted, never replayed into a dead stream.
+
+The clock is injectable so eviction is testable without real waiting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.stream.engine import StreamEngine
+
+from .protocol import BYE, DATA, HELLO, Frame, ProtocolError
+
+
+@dataclasses.dataclass
+class ModalityState:
+    """Sequencing state for one (patient, modality) stream."""
+
+    next_seq: int = 0
+    held: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    in_gap: bool = False           # a hole is currently open
+
+
+@dataclasses.dataclass
+class PatientSession:
+    patient: str
+    task: str
+    last_seen: float
+    modalities: Dict[str, ModalityState] = dataclasses.field(
+        default_factory=dict)
+    connects: int = 0
+    done: bool = False             # closed cleanly by BYE
+    evicted: bool = False          # closed by the stall reaper
+
+    @property
+    def closed(self) -> bool:
+        return self.done or self.evicted
+
+    def held_frames(self) -> int:
+        return sum(len(m.held) for m in self.modalities.values())
+
+
+class SessionManager:
+    """Order-restoring, exactly-once frame sink for many patient sessions.
+
+    ``on_frame`` accepts frames in any arrival order the transport produces
+    and feeds the engine a per-(patient, modality) in-order, duplicate-free
+    chunk stream.  ``reap`` applies the stall-timeout eviction policy.
+    """
+
+    def __init__(self, engine: StreamEngine, stall_timeout_s: float = 30.0,
+                 reorder_cap: int = 256,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = engine
+        self.stall_timeout_s = float(stall_timeout_s)
+        self.reorder_cap = int(reorder_cap)
+        self.clock = clock
+        self.sessions: Dict[str, PatientSession] = {}
+
+    # -- lifecycle ------------------------------------------------------------
+    def _session(self, frame: Frame, now: float) -> PatientSession:
+        s = self.sessions.get(frame.patient)
+        if s is None:
+            s = self.sessions[frame.patient] = PatientSession(
+                frame.patient, frame.task, last_seen=now)
+        elif s.task != frame.task:
+            raise ProtocolError(
+                f"patient {frame.patient!r} re-announced with task "
+                f"{frame.task!r}, session holds {s.task!r}")
+        return s
+
+    def on_frame(self, frame: Frame, now: Optional[float] = None) -> None:
+        """Process one decoded frame (HELLO / DATA / BYE)."""
+        now = self.clock() if now is None else now
+        s = self._session(frame, now)
+        led = self.engine.ledger
+        if s.evicted:
+            # the stream is dead: its tracker is finalized and its staged
+            # state freed — late frames are counted, never replayed
+            led.record_transport(frame.patient, late_frames=1)
+            return
+        s.last_seen = now
+        if frame.ftype == HELLO:
+            s.connects += 1
+            led.record_transport(frame.patient, connects=1)
+            return
+        if frame.ftype == BYE:
+            if not s.done:
+                s.done = True
+                # frames still held for a gap that never filled are lost
+                # data — count them; a clean close must not hide the hole
+                abandoned = s.held_frames()
+                for m in s.modalities.values():
+                    m.held.clear()
+                # the hardened close: dispatch the stream's remaining
+                # windows, THEN finalize the tracker, then free the
+                # dispatcher so a churning fleet stays flat — and never
+                # raise (a wedged done-but-unreleased session would leak
+                # and inflate the backpressure signal forever)
+                stats = self.engine.evict_patient(s.patient, s.task)
+                deltas = {"abandoned_frames": abandoned,
+                          "windows_dropped": stats["windows_dropped"]}
+                deltas = {k: v for k, v in deltas.items() if v}
+                if deltas:
+                    led.record_transport(s.patient, **deltas)
+            return
+        if s.done:
+            raise ProtocolError(
+                f"DATA for {frame.patient!r} after BYE")
+        self._on_data(s, frame)
+
+    # -- sequencing -----------------------------------------------------------
+    def _on_data(self, s: PatientSession, frame: Frame) -> None:
+        led = self.engine.ledger
+        led.record_transport(s.patient, frames=1, bytes=frame.nbytes())
+        m = s.modalities.setdefault(frame.modality, ModalityState())
+        seq = frame.seq
+        if seq < m.next_seq or seq in m.held:
+            led.record_transport(s.patient, dup_frames=1)
+            return
+        if seq > m.next_seq:
+            if not m.in_gap:
+                m.in_gap = True
+                led.record_transport(s.patient, gap_events=1)
+            if len(m.held) >= self.reorder_cap:
+                raise ProtocolError(
+                    f"reorder buffer for ({s.patient!r}, "
+                    f"{frame.modality!r}) exceeded {self.reorder_cap} "
+                    f"frames waiting for seq {m.next_seq}")
+            m.held[seq] = frame.payload
+            led.record_transport(s.patient, reordered_frames=1)
+            return
+        # in-order: deliver, then flush any now-contiguous held frames
+        self.engine.ingest(s.patient, s.task, frame.modality, frame.payload)
+        m.next_seq += 1
+        while m.next_seq in m.held:
+            self.engine.ingest(s.patient, s.task, frame.modality,
+                               m.held.pop(m.next_seq))
+            m.next_seq += 1
+        if m.in_gap and not m.held:
+            m.in_gap = False
+
+    # -- stall eviction -------------------------------------------------------
+    def reap(self, now: Optional[float] = None) -> List[str]:
+        """Evict every session stalled past ``stall_timeout_s``.
+
+        Eviction flushes the patient's complete pending windows through the
+        pipeline (so the delivered prefix is fully scored), finalizes the
+        tracker, frees the dispatcher's staged slices and rings, and counts
+        the event in the ledger's transport column.  Returns the evicted
+        patient ids.
+        """
+        now = self.clock() if now is None else now
+        evicted: List[str] = []
+        for s in self.sessions.values():
+            if s.closed or now - s.last_seen < self.stall_timeout_s:
+                continue
+            s.evicted = True
+            stats = self.engine.evict_patient(s.patient, s.task)
+            self.engine.ledger.record_transport(
+                s.patient, evictions=1,
+                windows_flushed=stats["windows_flushed"],
+                windows_dropped=stats["windows_dropped"],
+                staged_freed=stats["staged_slices"],
+                abandoned_frames=s.held_frames())
+            # drop the reorder buffers with the rest of the staged state
+            for m in s.modalities.values():
+                m.held.clear()
+            evicted.append(s.patient)
+        return evicted
+
+    # -- introspection --------------------------------------------------------
+    def backlog(self) -> int:
+        """Frames held for reordering plus engine windows awaiting dispatch
+        (total retained-state view, for telemetry)."""
+        held = sum(s.held_frames() for s in self.sessions.values())
+        return held + self.engine.pending_windows()
+
+    def dispatch_backlog(self) -> int:
+        """Windows awaiting dispatch ONLY — the backpressure signal.  Held
+        reorder frames are excluded on purpose: they drain when the missing
+        sequence number arrives on the very connections backpressure would
+        suspend, so counting them could deadlock the whole fleet (they are
+        independently bounded by ``reorder_cap`` per modality)."""
+        return self.engine.pending_windows()
+
+    def open_sessions(self) -> List[Tuple[str, str]]:
+        return [(s.patient, s.task) for s in self.sessions.values()
+                if not s.closed]
+
+    def all_closed(self) -> bool:
+        return bool(self.sessions) and all(
+            s.closed for s in self.sessions.values())

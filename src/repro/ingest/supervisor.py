@@ -1,0 +1,123 @@
+"""Supervisor: bounded result drain + per-patient fleet telemetry.
+
+``StreamEngine.pop_results`` used to be a foot-gun: forget to call it and
+results accumulate one entry per window for the life of the stream.  The
+supervisor owns the drain loop — every ``poll()`` moves freshly dispatched
+``WindowResult``s into a **bounded** queue (drop-oldest, with a counted
+warning the first time and at every doubling, so a soak run's log shows the
+loss without scrolling it off) and folds each window into per-patient
+telemetry:
+
+* windows and windows/sec per patient (monotonic counters — queue drops
+  never lose the count);
+* end-to-end latency percentiles (window ready → its batch materialized),
+  from a bounded per-patient reservoir of recent windows;
+* the ledger's transport column (frames/bytes/dups/gaps/evictions per
+  patient, maintained by the ``SessionManager``).
+
+``telemetry()`` returns the whole picture as one dict — what
+``stream_bench --json`` publishes as the ``transport`` block.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import time
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.stream.engine import StreamEngine, WindowResult, bounded_admit
+
+_PCTS = (50, 90, 99)
+
+
+def _percentiles(lat_s: List[float]) -> Dict[str, float]:
+    """{p50, p90, p99} in milliseconds; zeros when no samples."""
+    if not lat_s:
+        return {f"p{p}": 0.0 for p in _PCTS}
+    ms = np.asarray(lat_s) * 1e3
+    return {f"p{p}": float(np.percentile(ms, p)) for p in _PCTS}
+
+
+class Supervisor:
+    def __init__(self, engine: StreamEngine, capacity: int = 1024,
+                 latency_reservoir: int = 512,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.engine = engine
+        self.capacity = int(capacity)
+        self.queue: Deque[WindowResult] = collections.deque()
+        self.dropped = 0
+        self.total_windows = 0
+        self.clock = clock
+        self._warn_at = 1
+        self._reservoir = int(latency_reservoir)
+        self._patients: Dict[str, Dict[str, object]] = {}
+        self._fleet_lat: Deque[float] = collections.deque(
+            maxlen=4 * self._reservoir)
+
+    # -- drain ----------------------------------------------------------------
+    def poll(self) -> int:
+        """Move every dispatched result out of the engine; returns how many."""
+        rows = self.engine.pop_results()
+        now = self.clock()
+        for r in rows:
+            self.total_windows += 1
+            st = self._patients.get(r.patient)
+            if st is None:
+                st = self._patients[r.patient] = {
+                    "windows": 0, "first": now,
+                    "lat": collections.deque(maxlen=self._reservoir)}
+            st["windows"] += 1
+            st["last"] = now
+            if r.ready_wall:
+                # ready → batch materialized (done_wall); poll-time fallback
+                # only for results produced before the stamps existed
+                lat = (r.done_wall or now) - r.ready_wall
+                st["lat"].append(lat)
+                self._fleet_lat.append(lat)
+            self.dropped, self._warn_at = bounded_admit(
+                self.queue, r, self.capacity, self.dropped, self._warn_at,
+                f"supervisor result queue full (capacity={self.capacity})")
+        return len(rows)
+
+    def pop(self, max_n: Optional[int] = None) -> List[WindowResult]:
+        """Consume up to ``max_n`` results (all, when None) in FIFO order."""
+        n = len(self.queue) if max_n is None else min(max_n, len(self.queue))
+        return [self.queue.popleft() for _ in range(n)]
+
+    def results_for(self, patient: str, task: str) -> List[WindowResult]:
+        """Retained (not yet popped/dropped) results for one stream, in
+        window order — the demo/debug view; soak consumers should ``pop``."""
+        return sorted((r for r in self.queue
+                       if r.patient == patient and r.task == task),
+                      key=lambda r: r.widx)
+
+    # -- telemetry ------------------------------------------------------------
+    def telemetry(self) -> Dict[str, object]:
+        pats: Dict[str, Dict[str, float]] = {}
+        for pid, st in sorted(self._patients.items()):
+            dt = max(st.get("last", st["first"]) - st["first"], 0.0)
+            pats[pid] = {
+                "windows": st["windows"],
+                "windows_per_s": st["windows"] / dt if dt else 0.0,
+                "latency_ms": _percentiles(list(st["lat"])),
+            }
+        return {
+            "queue": {"capacity": self.capacity, "depth": len(self.queue),
+                      "dropped": self.dropped,
+                      "total_windows": self.total_windows},
+            "latency_ms": _percentiles(list(self._fleet_lat)),
+            "patients": pats,
+            "per_patient": self.engine.ledger.transport_summary(),
+        }
+
+    # -- soak loop ------------------------------------------------------------
+    async def run_async(self, interval_s: float = 0.02,
+                        stop: Optional[Callable[[], bool]] = None) -> None:
+        """Periodic poll loop for transport-driven runs: keeps the bounded
+        queue fed while the asyncio server ingests, until ``stop()``."""
+        while not (stop() if stop is not None else False):
+            self.poll()
+            await asyncio.sleep(interval_s)
+        self.poll()

@@ -7,9 +7,9 @@ posit10 R-peak per the paper's results), cross-patient batched dispatch
 through shared jit-compiled pipelines, and per-window energy accounting
 against the paper's ASIC model.
 """
-from .accounting import (EnergyLedger, cough_window_op_counts,
-                         energy_config_for_format, rpeak_window_op_counts,
-                         window_energy_nj)
+from .accounting import (EnergyLedger, TransportStats,
+                         cough_window_op_counts, energy_config_for_format,
+                         rpeak_window_op_counts, window_energy_nj)
 from .engine import StreamEngine, WindowResult, bucket_size
 from .pipelines import (COUGH_SPEC, RPEAK_SPEC, RPEAK_WINDOW_S, Pipeline,
                         cough_pipeline, rpeak_pipeline)
@@ -21,7 +21,8 @@ __all__ = [
     "COUGH_SPEC", "RPEAK_SPEC", "RPEAK_WINDOW_S",
     "EnergyLedger", "EscalationPolicy", "EscalationState", "ModalitySpec",
     "Pipeline", "PrecisionRouter", "RPeakTracker", "RingBuffer", "Route",
-    "StreamEngine", "TrackerUpdate", "Window", "WindowDispatcher",
+    "StreamEngine", "TrackerUpdate", "TransportStats", "Window",
+    "WindowDispatcher",
     "WindowResult", "WindowSpec", "bucket_size", "cough_pipeline",
     "cough_window_op_counts", "energy_config_for_format", "rpeak_pipeline",
     "rpeak_window_op_counts", "window_energy_nj",

@@ -86,6 +86,30 @@ def rpeak_window_op_counts(n: int, k_integration: int = 25) -> OpCounts:
 
 
 @dataclasses.dataclass
+class TransportStats:
+    """Per-patient transport/session counters (the ingest layer's column).
+
+    Maintained by ``repro.ingest.SessionManager`` / ``StreamEngine.
+    evict_patient``; zero-cost for in-process callers that never touch the
+    transport path.
+    """
+
+    frames: int = 0               # DATA frames received (incl. dups/held)
+    bytes: int = 0                # payload bytes of those frames
+    dup_frames: int = 0           # dropped as duplicates
+    reordered_frames: int = 0     # arrived early, held in the reorder buffer
+    gap_events: int = 0           # in-order → gapped transitions
+    connects: int = 0             # HELLOs (reconnects = connects - 1)
+    late_frames: int = 0          # arrived after eviction, dropped
+    abandoned_frames: int = 0     # held for a gap that never filled, lost
+    evictions: int = 0            # stall-timeout evictions (0 or 1)
+    windows_flushed: int = 0      # complete windows dispatched at close
+    windows_dropped: int = 0      # pending windows lost (eviction flush
+                                  # failed on an unroutable stream)
+    staged_freed: int = 0         # partial staged slices freed at close
+
+
+@dataclasses.dataclass
 class GroupStats:
     """Running totals for one (task, format) dispatch group."""
 
@@ -104,6 +128,8 @@ class EnergyLedger:
         # per-patient escalation attribution: extra nJ spent above the
         # patient's static format, and how many windows it covered
         self.escalation: Dict[str, Dict[str, float]] = {}
+        # per-patient transport/session counters (ingest layer)
+        self.transport: Dict[str, TransportStats] = {}
 
     def record(self, task: str, fmt: str, n_windows: int, n_padded: int,
                latency_s: float, ops_per_window: OpCounts,
@@ -125,6 +151,24 @@ class EnergyLedger:
                                        {"windows": 0, "extra_nj": 0.0})
         d["windows"] += 1
         d["extra_nj"] += extra_nj
+
+    def record_transport(self, patient: str, **deltas: int) -> None:
+        """Accumulate transport counters for one patient; ``deltas`` keys
+        must be ``TransportStats`` fields (typo-safe: unknown keys raise)."""
+        t = self.transport.setdefault(patient, TransportStats())
+        for k, v in deltas.items():
+            setattr(t, k, getattr(t, k) + v)  # AttributeError on a typo
+
+    def transport_summary(self) -> Dict[str, Dict[str, int]]:
+        """{patient: counters} plus a "fleet" rollup row (sums)."""
+        out = {p: dataclasses.asdict(t)
+               for p, t in sorted(self.transport.items())}
+        fleet = dataclasses.asdict(TransportStats())
+        for row in out.values():
+            for k, v in row.items():
+                fleet[k] += v
+        out["fleet"] = fleet
+        return out
 
     def escalation_summary(self) -> Dict[str, Dict[str, float]]:
         """Per-patient escalation attribution ({patient: windows/extra_nj})."""

@@ -20,9 +20,11 @@ extra energy of escalated windows attributed in the ledger.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Deque, Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
@@ -41,6 +43,24 @@ def bucket_size(n: int, max_batch: int) -> int:
     return min(1 << (n - 1).bit_length(), max_batch)
 
 
+def bounded_admit(queue: Deque, item, capacity: Optional[int],
+                  dropped: int, warn_at: int, label: str) -> Tuple[int, int]:
+    """Append ``item`` to a bounded deque, dropping the OLDEST entry past
+    ``capacity`` with a rate-limited (doubling) warning.  Returns the
+    updated ``(dropped, warn_at)`` counters.  Shared by the engine's result
+    backlog and the supervisor's queue so the overflow policy has exactly
+    one implementation."""
+    if capacity is not None and len(queue) >= capacity:
+        queue.popleft()
+        dropped += 1
+        if dropped >= warn_at:
+            warnings.warn(f"{label}: dropped oldest — {dropped} drops so "
+                          f"far", RuntimeWarning, stacklevel=3)
+            warn_at = max(warn_at * 2, 1)
+    queue.append(item)
+    return dropped, warn_at
+
+
 @dataclasses.dataclass
 class WindowResult:
     """One window's inference output with full provenance.
@@ -56,22 +76,59 @@ class WindowResult:
     fmt: str
     t0_s: float
     outputs: Dict[str, np.ndarray]  # per-window slices of the batch outputs
+    ready_wall: float = 0.0         # wall clock when the window became ready
+    done_wall: float = 0.0          # wall clock when its batch materialized
 
 
 class StreamEngine:
     def __init__(self, pipelines: Dict[str, Pipeline],
                  router: Optional[PrecisionRouter] = None,
-                 max_batch: int = 64, pad_to_max: bool = False):
+                 max_batch: int = 64, pad_to_max: bool = False,
+                 pad_policy: Optional[str] = None,
+                 autotune_horizon: int = 256,
+                 pad_auto_threshold: float = 0.25,
+                 result_capacity: Optional[int] = 4096):
         """``pad_to_max``: always pad dispatches to ``max_batch`` — exactly
         one compiled batch shape per (task, format), the steady-state service
         configuration. Default pow2 bucketing compiles more shapes but wastes
-        less compute on ragged tails."""
+        less compute on ragged tails.
+
+        ``pad_policy`` supersedes the boolean: ``"pow2"`` / ``"max"`` force a
+        strategy; ``"auto"`` warms up on pad-to-max (so the ledger's
+        ``padded_windows`` measures the TRUE single-shape padding waste —
+        pow2 bucketing would hide it, every ragged dispatch landing in a
+        snug bucket) and, once ``autotune_horizon`` windows are on the
+        ledger, stays there iff the observed padding ratio
+        padded/(windows+padded) is ≤ ``pad_auto_threshold``; ragged traffic
+        falls back to pow2 bucketing.  The decision survives ``reset()`` so
+        a benchmark can learn during warmup and measure the tuned steady
+        state.
+
+        ``result_capacity`` bounds the memory-resident ``results`` backlog:
+        an undrained engine drops its OLDEST results past the cap (counted
+        in ``dropped_results``, with a rate-limited warning) instead of
+        growing forever.  ``None`` restores the unbounded legacy behavior.
+        """
         self.pipelines = dict(pipelines)
         self.router = router or PrecisionRouter()
         self.max_batch = int(max_batch)
         self.pad_to_max = bool(pad_to_max)
+        if pad_policy is None:
+            pad_policy = "max" if pad_to_max else "pow2"
+        if pad_policy not in ("pow2", "max", "auto"):
+            raise ValueError(f"pad_policy {pad_policy!r} not in "
+                             f"('pow2', 'max', 'auto')")
+        self.pad_policy = pad_policy
+        self.autotune_horizon = int(autotune_horizon)
+        self.pad_auto_threshold = float(pad_auto_threshold)
+        self._pad_decision: Optional[bool] = None  # auto: None until decided
+        self.result_capacity = (None if result_capacity is None
+                                else int(result_capacity))
+        self.dropped_results = 0
+        self._drop_warn_at = 1
         self.ledger = EnergyLedger()
-        self.results: List[WindowResult] = []
+        self.results: Deque[WindowResult] = collections.deque()
+        self._evicted: Set[Tuple[str, str]] = set()
         self._dispatchers: Dict[Tuple[str, str], WindowDispatcher] = {}
         # pending windows grouped per (patient, task) in arrival order;
         # routed per GROUP at pump time (not per window), so a re-pinned
@@ -86,6 +143,9 @@ class StreamEngine:
     def register_patient(self, patient: str, task: str,
                          fmt: Optional[str] = None) -> None:
         key = (patient, task)
+        if key in self._evicted:
+            raise KeyError(f"{patient!r}'s {task!r} stream was closed "
+                           f"(BYE or stall eviction); reset() starts fresh")
         if key in self._dispatchers:
             raise KeyError(f"{patient!r} already registered for {task!r}")
         self._dispatchers[key] = WindowDispatcher(
@@ -180,6 +240,33 @@ class StreamEngine:
         """End-of-stream flush: dispatch everything still pending."""
         return self.pump(include_partial=True)
 
+    def pending_windows(self) -> int:
+        """Ready-but-undispatched window count across the fleet — the
+        transport layer's backpressure signal."""
+        return sum(len(ws) for ws in self._pending.values())
+
+    def _effective_pad_to_max(self) -> bool:
+        if self.pad_policy == "max":
+            return True
+        if self.pad_policy == "pow2":
+            return False
+        # auto: warm up on pad-to-max so padded_windows measures the true
+        # single-shape waste, then consult the ledger once
+        if self._pad_decision is None:
+            tot_w = sum(g.windows for g in self.ledger.stats.values())
+            if tot_w < self.autotune_horizon:
+                return True
+            tot_p = sum(g.padded_windows
+                        for g in self.ledger.stats.values())
+            self._pad_decision = (
+                tot_p / (tot_w + tot_p) <= self.pad_auto_threshold)
+        return self._pad_decision
+
+    def pad_strategy(self) -> str:
+        """The strategy dispatches use right now: "pow2" or "max" (an
+        undecided "auto" engine reports its warmup strategy, "max")."""
+        return "max" if self._effective_pad_to_max() else "pow2"
+
     def _fn(self, task: str, fmt: str):
         key = (task, fmt)
         if key not in self._fns:
@@ -190,7 +277,7 @@ class StreamEngine:
         pipe = self.pipelines[task]
         fn = self._fn(task, fmt)
         B = len(windows)
-        Bpad = self.max_batch if self.pad_to_max \
+        Bpad = self.max_batch if self._effective_pad_to_max() \
             else bucket_size(B, self.max_batch)
         # fresh per-dispatch buffers: safe to donate to the jit call, so
         # XLA may reuse their pages for outputs instead of allocating
@@ -213,9 +300,21 @@ class StreamEngine:
         n_esc, esc_nj = self._track(pipe, task, fmt, windows, rows)
         self.ledger.record(task, fmt, B, Bpad - B, dt, pipe.ops_per_window,
                            n_escalated=n_esc, escalation_extra_nj=esc_nj)
+        done = time.perf_counter()
         for w, row in zip(windows, rows):
-            self.results.append(WindowResult(
-                w.patient, task, w.widx, fmt, w.t0_s, row))
+            self._append_result(WindowResult(
+                w.patient, task, w.widx, fmt, w.t0_s, row,
+                ready_wall=w.ready_wall, done_wall=done))
+
+    def _append_result(self, r: WindowResult) -> None:
+        """Retain one result, dropping the oldest past ``result_capacity``
+        (counted + rate-limited warning): an undrained engine stays bounded."""
+        self.dropped_results, self._drop_warn_at = bounded_admit(
+            self.results, r, self.result_capacity, self.dropped_results,
+            self._drop_warn_at,
+            f"engine results backlog full (result_capacity="
+            f"{self.result_capacity}); drain with pop_results() or run a "
+            f"repro.ingest.Supervisor")
 
     def _track(self, pipe: Pipeline, task: str, fmt: str,
                windows: List[Window], rows: List[Dict[str, np.ndarray]]
@@ -279,14 +378,73 @@ class StreamEngine:
         return {key: self.finalize_patient(*key)
                 for key in sorted(self._trackers)}
 
+    # -- stream close / stall eviction ----------------------------------------
+    def release_patient(self, patient: str, task: str) -> Tuple[int, int]:
+        """Free a closed stream's dispatcher — ring buffers, partially
+        staged slices, window-grid state — and refuse further ingest for
+        it.  The tracker (the stream's peak history) and any undrained
+        results are kept.  Returns the (slices, bytes) freed.  The session
+        layer calls this after a clean BYE so a churning fleet doesn't
+        accumulate one dispatcher per patient ever seen."""
+        key = (patient, task)
+        self._evicted.add(key)
+        disp = self._dispatchers.pop(key, None)
+        return disp.staged_cost() if disp is not None else (0, 0)
+
+    def evict_patient(self, patient: str, task: str) -> Dict[str, int]:
+        """Close one stream — clean BYE or stall eviction: dispatch its
+        complete pending windows (so the delivered prefix is fully scored),
+        finalize its tracker, and free its dispatcher — rings, partially
+        staged slices, sequencing state.  Further ingest for the stream
+        raises.  Returns what was flushed/dropped/freed, for the ledger's
+        transport column.
+
+        This path must never raise (a close that wedges the session layer
+        is worse than a lossy close): a failing dispatch drops the stream's
+        remaining windows and counts them, batches dispatched before the
+        failure still count as flushed, and a finalize failure is swallowed
+        after the state is freed.
+
+        The delivered-prefix guarantee: after eviction the tracker's
+        ``peaks`` equal the offline detector's output on exactly the window
+        prefix that fully arrived (``tests/test_ingest.py`` pins this).
+        """
+        key = (patient, task)
+        flushed = dropped = 0
+        ws = self._pending.pop(key, [])
+        if ws:
+            try:
+                fmt = self.router.route(patient, task).fmt
+                while ws:
+                    batch = ws[: self.max_batch]
+                    self._dispatch(task, fmt, batch)
+                    del ws[: len(batch)]
+                    flushed += len(batch)
+            except Exception:
+                dropped = len(ws)   # the un-dispatched remainder is lost
+            self._recount_pending()
+        staged_slices, staged_bytes = self.release_patient(patient, task)
+        if key in self._trackers:
+            try:
+                self.finalize_patient(patient, task)
+            except Exception:
+                pass    # unroutable tracker flush: state is already freed
+        return {"windows_flushed": flushed, "windows_dropped": dropped,
+                "staged_slices": staged_slices,
+                "staged_bytes": staged_bytes}
+
     def reset(self) -> None:
         """Fresh streams and metrics; compiled (task, format) functions are
-        kept so a benchmark can warm up, reset, then measure steady state."""
+        kept so a benchmark can warm up, reset, then measure steady state —
+        and so is an ``"auto"`` pad-policy decision learned during warmup."""
         self._dispatchers.clear()
         self._pending.clear()
         self._pending_counts.clear()
         self._trackers.clear()
-        self.results = []
+        self._evicted.clear()
+        self.results = collections.deque()
+        self.dropped_results = 0
+        self._drop_warn_at = 1
         self.ledger = EnergyLedger()
 
     # -- reporting ------------------------------------------------------------
@@ -298,9 +456,14 @@ class StreamEngine:
                if r.patient == patient and r.task == task]
         return sorted(out, key=lambda r: r.widx)
 
-    def pop_results(self) -> List[WindowResult]:
-        """Consume-and-clear: long-running callers must drain results (and
-        forward them to storage/alerting) or ``results`` grows one entry per
-        window for the life of the stream."""
-        out, self.results = self.results, []
-        return out
+    def pop_results(self, max_n: Optional[int] = None) -> List[WindowResult]:
+        """Consume up to ``max_n`` results (all, when None) in FIFO order —
+        the supervisor's non-blocking drain.  The backlog itself is bounded
+        by ``result_capacity`` (drop-oldest), so even an undrained engine's
+        memory stays flat; drops are counted in ``dropped_results``."""
+        if max_n is None:
+            out = list(self.results)
+            self.results.clear()
+            return out
+        n = min(int(max_n), len(self.results))
+        return [self.results.popleft() for _ in range(n)]

@@ -75,7 +75,11 @@ class Pipeline:
 
 
 def cough_pipeline(forest: Forest) -> Pipeline:
+    @functools.lru_cache(maxsize=None)
     def make_fn(fmt: str):
+        # memoized per pipeline instance: engines sharing one Pipeline
+        # (e.g. a transport engine and its in-process parity reference)
+        # share the compiled function instead of re-tracing per engine
         scorer = make_cough_scorer(fmt, forest)
 
         def fn(arrays: Dict[str, jax.Array]) -> Dict[str, jax.Array]:

@@ -10,6 +10,7 @@ modality has full coverage of [k·hop_s, k·hop_s + window_s).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -93,13 +94,19 @@ class RingBuffer:
 
 @dataclasses.dataclass
 class Window:
-    """One ready window: per-modality sample blocks plus provenance."""
+    """One ready window: per-modality sample blocks plus provenance.
+
+    ``ready_wall`` is the wall clock (``time.perf_counter``) at emission —
+    the moment the last contributing chunk completed the window — so the
+    supervisor can report end-to-end ready→result latency percentiles.
+    """
 
     patient: str
     task: str
     widx: int
     t0_s: float
     arrays: Dict[str, np.ndarray]  # modality name → (channels, n) float
+    ready_wall: float = 0.0
 
 
 class WindowDispatcher:
@@ -173,10 +180,21 @@ class WindowDispatcher:
         n = self.ready_count()
         if max_windows is not None:
             n = min(n, max_windows)
+        now = time.perf_counter()
         for _ in range(n):
             w = self.next_widx
             arrays = self._staged.pop(w)
             out.append(Window(self.patient, self.spec.task, w,
-                              w * self.spec.hop_s, arrays))
+                              w * self.spec.hop_s, arrays, ready_wall=now))
             self.next_widx += 1
         return out
+
+    def staged_cost(self) -> Tuple[int, int]:
+        """(slice count, bytes) of partially staged windows — what a stall
+        eviction frees.  Exactly-once emission is why these are retained:
+        a window missing one modality can never be re-cut once its ring
+        history is overwritten, so only eviction may discard them."""
+        slices = sum(len(d) for d in self._staged.values())
+        nbytes = sum(a.nbytes for d in self._staged.values()
+                     for a in d.values())
+        return slices, nbytes

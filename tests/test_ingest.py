@@ -1,0 +1,432 @@
+"""Ingest layer: framed wire protocol, session sequencing, asyncio TCP
+transport, stall-timeout eviction, and fleet-scale parity.
+
+The load-bearing contract: a fleet streamed over the transport (loopback
+byte codec or live asyncio-TCP with duplicates, reordering, and mid-window
+disconnect/reconnect) produces **bit-identical** window outputs and R-peak
+streams to the in-process driver on the same signals — the transport layer
+adds delivery semantics, never arithmetic — while a stalled patient is
+evicted on timeout with its delivered prefix finalized exactly as the
+offline detector would score it.
+"""
+import asyncio
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.apps.bayeslope import detect_rpeaks
+from repro.apps.cough import train_reference_forest
+from repro.core.arith import Arith
+from repro.data.biosignals import ecg_stream_signal, ragged_chunks
+from repro.ingest import (FleetSimulator, Frame, FrameDecoder, IngestServer,
+                          ProtocolError, SessionManager, Supervisor, bye,
+                          data, decode_body, encode_frame, hello, loopback)
+from repro.ingest.protocol import MAX_FRAME_BYTES
+from repro.stream import StreamEngine, cough_pipeline, rpeak_pipeline
+
+W = 500  # samples per 2 s R-peak window
+
+
+@pytest.fixture(scope="module")
+def forest():
+    return train_reference_forest(48, 123, n_trees=5, depth=4)
+
+
+@pytest.fixture(scope="module")
+def pipelines(forest):
+    """ONE pipeline dict shared by every engine in this module: the
+    memoized make_fn means parity pairs share compiled functions."""
+    return {"cough": cough_pipeline(forest), "rpeak": rpeak_pipeline()}
+
+
+def _rpeak_engine(**kw):
+    return StreamEngine({"rpeak": rpeak_pipeline()}, **kw)
+
+
+def _offline_prefix(sig_1d: np.ndarray, fmt: str = "posit10"):
+    n = (len(sig_1d) // W) * W
+    return detect_rpeaks(Arith.make(fmt), sig_1d[:n])
+
+
+# ---------------------------------------------------------------------------
+# Wire protocol
+# ---------------------------------------------------------------------------
+def test_frame_roundtrip_under_ragged_byte_splits():
+    rng = np.random.default_rng(0)
+    frames = [hello("p-0", "rpeak")]
+    for s in range(5):
+        payload = rng.normal(size=(2, int(rng.integers(1, 300)))) * 1e3
+        if s % 2:
+            payload = payload.astype(np.float32)
+        frames.append(data("p-0", "rpeak", "ecg", s, payload))
+    frames.append(bye("p-0", "rpeak"))
+    got = list(loopback(frames, chunk_bytes=97, rng=rng))
+    assert [f.ftype for f in got] == [f.ftype for f in frames]
+    for a, b in zip(got, frames):
+        assert (a.patient, a.task, a.modality, a.seq) == \
+            (b.patient, b.task, b.modality, b.seq)
+        if b.payload is not None:
+            # bit-exact payloads: the wire never touches sample values
+            np.testing.assert_array_equal(a.payload, b.payload)
+            assert a.payload.dtype == b.payload.dtype
+
+
+def test_decoder_rejects_corruption_and_poisons():
+    corrupt = bytearray(encode_frame(data("p", "t", "m", 1,
+                                          np.ones((1, 8)))))
+    corrupt[30] ^= 0xFF  # flip one payload byte: CRC must catch it
+    # an intact frame ahead of the corruption is still delivered — data
+    # loss must not depend on how TCP happened to segment the stream
+    dec = FrameDecoder()
+    got = dec.feed(encode_frame(data("p", "t", "m", 0, np.ones((1, 4))))
+                   + bytes(corrupt))
+    assert [f.seq for f in got] == [0] and dec.poisoned
+    with pytest.raises(ProtocolError):  # poisoned: no resync on a torn stream
+        dec.feed(encode_frame(hello("p", "t")))
+
+    # oversize length prefix rejected before any allocation
+    dec2 = FrameDecoder()
+    assert dec2.feed((MAX_FRAME_BYTES + 1).to_bytes(4, "big")) == []
+    assert dec2.poisoned
+    with pytest.raises(ProtocolError):
+        dec2.feed(b"")
+
+    # bad magic / version / type, each with a valid CRC
+    import struct
+    import zlib
+
+    def _recrc(b):
+        b[-4:] = struct.pack(">I", zlib.crc32(bytes(b[:-4])) & 0xFFFFFFFF)
+        return bytes(b)
+
+    body = bytearray(encode_frame(hello("p", "t"))[4:])
+    for patch in ((0, ord("X")), (2, 99), (3, 77)):
+        b = bytearray(body)
+        b[patch[0]] = patch[1]
+        with pytest.raises(ProtocolError):
+            decode_body(_recrc(b))
+    # CRC-valid body whose string-length byte lies about the remaining
+    # bytes: a buggy encoder must still read as ProtocolError
+    b = bytearray(body)
+    b[4] = 200  # patient length far past the end of the body
+    with pytest.raises(ProtocolError):
+        decode_body(_recrc(b))
+
+
+# ---------------------------------------------------------------------------
+# Session sequencing: reorder, duplicates, exactly-once
+# ---------------------------------------------------------------------------
+def test_session_restores_order_drops_dups_exactly_once():
+    sig, _ = ecg_stream_signal(8.0, seed=3)
+    rng = np.random.default_rng(0)
+    chunks = list(ragged_chunks(sig[None, :], rng, 50, 400))
+    frames = [hello("e0", "rpeak")] + [
+        data("e0", "rpeak", "ecg", i, c) for i, c in enumerate(chunks)]
+    frames[2], frames[3] = frames[3], frames[2]   # reorder
+    frames.insert(6, frames[5])                   # duplicate
+    frames.append(frames[1])                      # late duplicate
+    frames.append(bye("e0", "rpeak"))
+
+    eng = _rpeak_engine(max_batch=4)
+    sm = SessionManager(eng, stall_timeout_s=60.0, clock=lambda: 0.0)
+    for f in loopback(frames, chunk_bytes=251, rng=rng):
+        sm.on_frame(f)
+    # delivered exactly once, in order ⇒ peaks equal the offline detector
+    assert eng.tracker_for("e0", "rpeak").peaks == _offline_prefix(sig)
+    t = eng.ledger.transport_summary()["e0"]
+    assert t["dup_frames"] == 2 and t["reordered_frames"] == 1
+    assert t["gap_events"] == 1 and t["connects"] == 1
+    assert t["frames"] == len(chunks) + 2  # received = unique + 2 dups
+
+
+def test_session_guards_task_change_post_bye_and_reorder_cap():
+    eng = _rpeak_engine(max_batch=4)
+    sm = SessionManager(eng, reorder_cap=2, clock=lambda: 0.0)
+    sm.on_frame(hello("p", "rpeak"))
+    sm.on_frame(data("p", "rpeak", "ecg", 0, np.zeros((1, 4))))
+    with pytest.raises(ProtocolError):
+        sm.on_frame(hello("p", "cough"))
+    # seq 2 held behind a gap that never fills: BYE counts it as abandoned
+    sm.on_frame(data("p", "rpeak", "ecg", 2, np.zeros((1, 4))))
+    sm.on_frame(bye("p", "rpeak"))
+    t = eng.ledger.transport_summary()["p"]
+    assert t["abandoned_frames"] == 1
+    with pytest.raises(ProtocolError):
+        sm.on_frame(data("p", "rpeak", "ecg", 1, np.zeros((1, 4))))
+    # a clean close releases the dispatcher: the engine refuses new chunks
+    with pytest.raises(KeyError):
+        eng.ingest("p", "rpeak", "ecg", np.zeros((1, 4)))
+    # reorder buffer bound: seq 0 never arrives, cap of held frames enforced
+    sm2 = SessionManager(_rpeak_engine(max_batch=4), reorder_cap=2,
+                         clock=lambda: 0.0)
+    for s in (1, 2):
+        sm2.on_frame(data("q", "rpeak", "ecg", s, np.zeros((1, 4))))
+    with pytest.raises(ProtocolError):
+        sm2.on_frame(data("q", "rpeak", "ecg", 3, np.zeros((1, 4))))
+
+
+# ---------------------------------------------------------------------------
+# Stall eviction
+# ---------------------------------------------------------------------------
+def test_stall_eviction_finalizes_prefix_frees_staged_counts_late(pipelines):
+    eng = StreamEngine(pipelines, max_batch=8)
+    t = [0.0]
+    sm = SessionManager(eng, stall_timeout_s=5.0, clock=lambda: t[0])
+    sim = FleetSimulator(n_patients=3, windows=3, seed=7, mixed=False,
+                         n_cough=0, stall_after={"ecg-000": 2})
+    sim.run_loopback(sm)
+    assert sm.reap() == []              # no time has passed: nobody stalls
+    t[0] = 6.0
+    assert sm.reap() == ["ecg-000"]     # past the timeout: evicted
+    assert sm.reap() == []              # idempotent
+
+    # parity on the delivered prefix: streaming peaks ≡ offline peaks
+    plan = next(p for p in sim.plans if p.patient == "ecg-000")
+    prefix = np.concatenate([c[0] for c in plan.chunks["ecg"][:2]])
+    assert eng.tracker_for("ecg-000", "rpeak").peaks == \
+        _offline_prefix(prefix)
+    tr = eng.ledger.transport_summary()["ecg-000"]
+    assert tr["evictions"] == 1
+    assert tr["windows_flushed"] == len(prefix) // W
+
+    # the evicted stream is closed: late frames counted, ingest refused
+    sm.on_frame(data("ecg-000", "rpeak", "ecg", 2, np.zeros((1, 8))))
+    assert eng.ledger.transport_summary()["ecg-000"]["late_frames"] == 1
+    with pytest.raises(KeyError):
+        eng.ingest("ecg-000", "rpeak", "ecg", np.zeros((1, 8)))
+
+    # non-stalled patients are untouched: full-stream offline parity
+    for p in sim.plans:
+        if p.patient == "ecg-000":
+            continue
+        assert eng.tracker_for(p.patient, "rpeak").peaks == \
+            _offline_prefix(p.signals["ecg"][0])
+
+
+def test_bye_on_failing_stream_is_contained_and_counted():
+    # a stream whose dispatch cannot succeed (bad pin) must still close
+    # cleanly on BYE: windows dropped + counted, dispatcher released, and
+    # the backpressure signal returns to zero — never a wedged session
+    eng = _rpeak_engine(max_batch=64)
+    sm = SessionManager(eng, clock=lambda: 0.0)
+    sm.on_frame(hello("p", "rpeak"))
+    eng.router.pin("p", "no-such-format")
+    sm.on_frame(data("p", "rpeak", "ecg", 0, np.zeros((1, 1000))))
+    assert eng.pending_windows() == 2
+    sm.on_frame(bye("p", "rpeak"))          # contained: must not raise
+    t = eng.ledger.transport_summary()["p"]
+    assert t["windows_dropped"] == 2 and t["evictions"] == 0
+    assert eng.pending_windows() == 0 and sm.dispatch_backlog() == 0
+    with pytest.raises(KeyError):
+        eng.ingest("p", "rpeak", "ecg", np.zeros((1, 8)))
+
+
+def test_eviction_frees_partially_staged_multimodal_slices(pipelines):
+    # audio fully delivered, IMU absent: every window is HALF-staged —
+    # exactly the state exactly-once retention can never reclaim on its own
+    from repro.data.biosignals import cough_stream_signals
+    eng = StreamEngine(pipelines, max_batch=8)
+    t = [0.0]
+    sm = SessionManager(eng, stall_timeout_s=5.0, clock=lambda: t[0])
+    audio, _, _ = cough_stream_signals(3, seed=5)
+    sm.on_frame(hello("c0", "cough"))
+    sm.on_frame(data("c0", "cough", "audio", 0, audio))
+    t[0] = 10.0
+    assert sm.reap() == ["c0"]
+    tr = eng.ledger.transport_summary()["c0"]
+    assert tr["windows_flushed"] == 0       # no window ever completed
+    assert tr["staged_freed"] == 3          # 3 staged audio slices freed
+    assert eng.pending_windows() == 0
+
+
+# ---------------------------------------------------------------------------
+# Asyncio TCP transport
+# ---------------------------------------------------------------------------
+def _run_tcp_fleet(engine, sim, stall_timeout_s=30.0, reap_interval_s=None,
+                   sup=None):
+    """Serve one simulated fleet over localhost TCP until every session
+    closes (BYE or eviction); returns the server for its counters."""
+    async def main():
+        sm = SessionManager(engine, stall_timeout_s=stall_timeout_s)
+        sim.pin_all(engine)
+        async with IngestServer(sm, port=0,
+                                reap_interval_s=reap_interval_s) as srv:
+            done = [False]
+            pump = None
+            if sup is not None:
+                pump = asyncio.ensure_future(
+                    sup.run_async(0.005, stop=lambda: done[0]))
+            await sim.run_tcp("127.0.0.1", srv.port)
+            deadline = asyncio.get_event_loop().time() + 60.0
+            while not sm.all_closed():
+                if asyncio.get_event_loop().time() > deadline:
+                    raise TimeoutError(
+                        f"sessions never closed: {sm.open_sessions()}")
+                await asyncio.sleep(0.02)
+            done[0] = True
+            if pump is not None:
+                await pump
+            return srv
+    srv = asyncio.run(main())
+    engine.drain()
+    if sup is not None:
+        sup.poll()
+    return srv
+
+
+def test_tcp_mid_window_disconnect_reconnect_resumes():
+    sim = FleetSimulator(n_patients=2, windows=3, seed=11, mixed=False,
+                         n_cough=0, disconnect_every=2,
+                         ecg_chunk=(40, 200))  # many frames ⇒ many segments
+    eng = _rpeak_engine(max_batch=4)
+    srv = _run_tcp_fleet(eng, sim)
+    # every patient reconnected at least once, mid-stream (and the 40..200
+    # sample chunks guarantee the cuts land inside windows)
+    ts = eng.ledger.transport_summary()
+    for p in sim.plans:
+        assert ts[p.patient]["connects"] >= 2
+        assert eng.tracker_for(p.patient, "rpeak").peaks == \
+            _offline_prefix(p.signals["ecg"][0]), p.patient
+    assert srv.connections_total == ts["fleet"]["connects"]
+
+
+def test_fleet_64_patient_tcp_parity_with_inproc_driver(pipelines):
+    """The acceptance run: 64 patients over asyncio-TCP loopback with
+    duplicates, deferred (gap + late) frames, and one mid-stream stall —
+    every non-evicted patient bit-identical to the in-process driver; the
+    stalled patient evicted with its counters on the ledger."""
+    sim = FleetSimulator(n_patients=64, windows=2, seed=0, mixed=True,
+                         dup_rate=0.05, defer_rate=0.05,
+                         stall_after={"ecg-031": 1})
+    # in-process reference driver on the same signals
+    ref = StreamEngine(pipelines, max_batch=16, pad_policy="max",
+                       result_capacity=None)
+    sim.run_inproc(ref)
+    # transport run
+    eng = StreamEngine(pipelines, max_batch=16, pad_policy="max",
+                       result_capacity=None)
+    sup = Supervisor(eng, capacity=8192)
+    _run_tcp_fleet(eng, sim, stall_timeout_s=1.0, reap_interval_s=0.2,
+                   sup=sup)
+
+    ts = eng.ledger.transport_summary()
+    assert ts["ecg-031"]["evictions"] == 1
+    assert ts["fleet"]["dup_frames"] > 0       # faults actually injected
+    assert ts["fleet"]["reordered_frames"] > 0
+
+    ref_rows = {}
+    for r in ref.pop_results():
+        ref_rows[(r.patient, r.task, r.widx)] = r
+    n_checked = n_stalled = 0
+    for r in sup.pop():
+        ref_r = ref_rows[(r.patient, r.task, r.widx)]
+        assert r.fmt == ref_r.fmt, r.patient
+        for k, v in r.outputs.items():
+            np.testing.assert_array_equal(
+                v, ref_r.outputs[k], err_msg=f"{r.patient} w{r.widx} {k}")
+        n_checked += 1
+        n_stalled += r.patient == "ecg-031"
+    # everything the fleet delivered was checked: all 64 patients' full
+    # streams except the stalled patient's undelivered tail
+    plan = next(p for p in sim.plans if p.patient == "ecg-031")
+    prefix = np.concatenate([c[0] for c in plan.chunks["ecg"][:1]])
+    assert n_stalled == len(prefix) // W    # the delivered-prefix windows
+    assert n_checked == 63 * 2 + n_stalled
+    # R-peak streams: identical trackers for every non-evicted patient
+    for p in sim.plans:
+        if p.task != "rpeak" or p.patient == "ecg-031":
+            continue
+        assert eng.tracker_for(p.patient, "rpeak").peaks == \
+            ref.tracker_for(p.patient, "rpeak").peaks, p.patient
+    # the evicted prefix still matches the offline detector
+    fmt = sim.pins.get("ecg-031", "posit10")
+    tr31 = eng.tracker_for("ecg-031", "rpeak")
+    got31 = tr31.peaks if tr31 is not None else []
+    want31 = _offline_prefix(prefix, fmt) if len(prefix) >= W else []
+    assert got31 == want31
+
+
+def test_stream_bench_tcp_soak_reports_eviction_in_transport_block(forest):
+    """The CI soak configuration end-to-end: the JSON doc's transport block
+    carries the eviction + gap/dup counters and latency percentiles."""
+    import os
+    import sys
+    bench_dir = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+    sys.path.insert(0, bench_dir)
+    try:
+        import stream_bench
+    finally:
+        sys.path.remove(bench_dir)
+    doc = stream_bench.run(patients=4, windows=2, max_batch=4, smoke=True,
+                           seed=0, forest=forest, transport="tcp", stall=1,
+                           stall_timeout_s=0.5)
+    tr = doc["transport"]
+    assert tr["mode"] == "tcp"
+    assert tr["counters"]["evictions"] == 1
+    assert tr["counters"]["frames"] > 0
+    assert tr["latency_ms"]["p50"] > 0
+    assert set(tr["latency_ms"]) == {"p50", "p90", "p99"}
+    assert tr["result_queue"]["dropped"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Bounded drains (the pop_results foot-gun fixes)
+# ---------------------------------------------------------------------------
+def test_undrained_engine_results_stay_bounded():
+    eng = _rpeak_engine(max_batch=2, result_capacity=5)
+    sim = FleetSimulator(n_patients=4, windows=3, seed=1, mixed=False,
+                         n_cough=0)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sim.run_inproc(eng)             # never pops: 12 windows stream by
+    assert len(eng.results) == 5        # memory-resident backlog is bounded
+    assert eng.dropped_results == 12 - 5
+    assert any("result_capacity" in str(x.message) for x in w)
+    assert len(eng.pop_results(2)) == 2 and len(eng.results) == 3
+
+
+def test_supervisor_bounded_queue_drop_oldest_counts():
+    eng = _rpeak_engine(max_batch=2)
+    sup = Supervisor(eng, capacity=4)
+    sim = FleetSimulator(n_patients=2, windows=3, seed=2, mixed=False,
+                         n_cough=0)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sim.run_inproc(eng)
+        sup.poll()
+    assert len(sup.queue) == 4 and sup.dropped == 2
+    assert sup.total_windows == 6       # monotonic count survives drops
+    assert any("supervisor result queue full" in str(x.message) for x in w)
+    tele = sup.telemetry()
+    assert tele["queue"]["dropped"] == 2
+    assert set(tele["latency_ms"]) == {"p50", "p90", "p99"}
+    assert tele["latency_ms"]["p50"] > 0
+    for pid in ("ecg-000", "ecg-001"):
+        assert tele["patients"][pid]["windows"] == 3
+
+
+# ---------------------------------------------------------------------------
+# pad_to_max ↔ pow2 auto-tuning (closes the ROADMAP open item)
+# ---------------------------------------------------------------------------
+def test_pad_policy_autotune_full_batches_stay_on_max():
+    eng = _rpeak_engine(max_batch=4, pad_policy="auto", autotune_horizon=8)
+    assert eng.pad_strategy() == "max"          # warmup measures true waste
+    FleetSimulator(8, 3, seed=0, mixed=False, n_cough=0).run_inproc(eng)
+    assert eng.pad_strategy() == "max"          # batches full: stay
+
+
+def test_pad_policy_autotune_ragged_traffic_falls_back_to_pow2():
+    eng = _rpeak_engine(max_batch=4, pad_policy="auto", autotune_horizon=4)
+    for k in range(8):
+        sig, _ = ecg_stream_signal(2.0, seed=k)
+        eng.ingest(f"p{k}", "rpeak", "ecg", sig[None, :])
+        eng.pump()                              # singles: 75% padding waste
+    assert eng.pad_strategy() == "pow2"
+    eng.reset()
+    assert eng.pad_strategy() == "pow2"         # decision survives reset
+    # override knob: explicit policies never consult the ledger
+    assert _rpeak_engine(pad_policy="pow2").pad_strategy() == "pow2"
+    assert _rpeak_engine(pad_to_max=True).pad_strategy() == "max"
+    with pytest.raises(ValueError):
+        _rpeak_engine(pad_policy="sometimes")

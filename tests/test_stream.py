@@ -293,10 +293,15 @@ def test_stream_bench_json_schema_matches_committed(forest, tmp_path):
     with open(os.path.join(bench_dir, "..", "BENCH_stream.json")) as f:
         committed = json.load(f)
     assert json.loads(out.read_text()) == doc
-    # top-level, config, wall and escalation key sets are pinned
+    # top-level, config, wall, escalation and transport key sets are pinned
     assert set(doc) == set(committed)
-    for section in ("config", "wall", "escalation"):
+    for section in ("config", "wall", "escalation", "transport"):
         assert set(doc[section]) == set(committed[section]), section
+    # the transport block's nested stats (latency percentiles, gap/dup/
+    # eviction counters, result-queue drops) are part of the contract
+    for sub in ("counters", "latency_ms", "result_queue"):
+        assert set(doc["transport"][sub]) == \
+            set(committed["transport"][sub]), sub
     # every group row (fleet and task/fmt alike) carries the same metrics
     for name, row in list(doc["groups"].items()) + \
             list(committed["groups"].items()):
