@@ -1,0 +1,73 @@
+"""CI perf-smoke gate: fail when the fleet slows down vs the committed
+baseline.
+
+  python benchmarks/check_perf.py --baseline BENCH_stream.json \
+      --current smoke_perf.json [--max-regress 0.25]
+
+``--baseline`` is the committed ``BENCH_stream.json`` whose
+``smoke_baseline`` block was recorded with ``stream_bench
+--smoke-baseline`` on the reference container; ``--current`` is a fresh
+``stream_bench --smoke --json`` run.  The gate compares like-for-like
+(both smoke-sized, warmup-free, identical fleet mix and backend config —
+mismatches are an error, not a pass) and fails when
+``fleet.us_per_window`` regresses more than ``--max-regress`` (default
+25%).  Improvements always pass; a note is printed either way so the CI
+log shows the trajectory.
+
+Scope caveat: smoke runs skip the warmup pass, so the gated number is
+dominated by jit compile time (hundreds of ms/window vs ~0.3 warm).  The
+gate therefore primarily catches compile-time blowups, import-time
+regressions, and gross (≥compile-scale) runtime slowdowns — the warmed
+per-kernel trajectory lives in the committed full-run ``groups`` and the
+slow lane's paired A/B artifact, not here.  The baseline is also
+machine-specific: if CI runner hardware shifts enough that the gate trips
+with no code change, re-record the committed baseline (``stream_bench
+--json --smoke-baseline``) rather than widening ``--max-regress``.
+"""
+import argparse
+import json
+import sys
+
+# config keys that must match for the µs/window comparison to mean anything
+COMPARABLE = ("patients", "windows", "max_batch", "smoke", "homogeneous",
+              "escalate", "transport", "backend", "seed", "round_backend",
+              "fused_kernels")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_stream.json (with smoke_baseline)")
+    ap.add_argument("--current", required=True,
+                    help="fresh stream_bench --smoke --json output")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed fractional slowdown (default 0.25)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base_doc = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+    base = base_doc.get("smoke_baseline")
+    if not base:
+        sys.exit(f"{args.baseline} has no smoke_baseline block — "
+                 f"regenerate it with stream_bench --json --smoke-baseline")
+    mismatched = [k for k in COMPARABLE
+                  if base["config"].get(k) != cur["config"].get(k)]
+    if mismatched:
+        sys.exit(f"baseline/current configs are not comparable on "
+                 f"{mismatched}: {[(k, base['config'].get(k), cur['config'].get(k)) for k in mismatched]}")
+
+    b_us = base["fleet"]["us_per_window"]
+    c_us = cur["groups"]["fleet"]["us_per_window"]
+    change = c_us / b_us - 1.0
+    verdict = "REGRESSION" if change > args.max_regress else "ok"
+    print(f"perf-smoke fleet us/window: baseline {b_us:.0f} → current "
+          f"{c_us:.0f} ({change:+.1%}, gate +{args.max_regress:.0%}) "
+          f"[{verdict}]")
+    if change > args.max_regress:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

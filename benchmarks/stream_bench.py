@@ -10,6 +10,12 @@ per-format throughput (windows/sec) and model energy (nJ/window).
   python benchmarks/stream_bench.py --transport tcp --smoke --stall 1
                                                  # fleet soak over localhost
                                                  # TCP + a stalled patient
+  python benchmarks/stream_bench.py --ab fused,unfused --repeat 3 --json
+                                                 # paired fused-vs-oracle
+                                                 # medians of alternating runs
+  python benchmarks/stream_bench.py --json --ab fused,unfused,codec \
+                                    --smoke-baseline   # regenerate the
+                                                 # committed record + CI gate
 
 Output follows benchmarks/run.py conventions: ``name,us_per_call,derived``
 CSV rows, one per (task, format) group plus a fleet rollup.  ``--json``
@@ -35,6 +41,7 @@ import json
 import os
 import sys
 import time
+from statistics import median as _median
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -150,19 +157,30 @@ def _stream_transport(engine, supervisor, sim, transport, stall_timeout_s,
     asyncio.run(tcp_main())
 
 
+# A/B arms: each sets the (fused, round-backend) selection for one full
+# alternating pass — "fused" is the default PR-5 backend, "unfused" the
+# retained element-per-step/per-op oracles, "codec" additionally swaps the
+# posit rounding for the encode∘decode oracle (the deep before).
+AB_ARMS = {
+    "fused": ("on", None),
+    "unfused": ("off", None),
+    "codec": ("off", "codec"),
+}
+
+
 def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
         homogeneous: bool = False, escalate: bool = False, seed: int = 0,
         json_path=None, forest=None, transport: str = "inproc",
         stall: int = 0, stall_timeout_s: float = 1.5,
-        pad_policy=None):
+        pad_policy=None, fused=None, round_backend=None):
     """Build and stream the fleet; returns the machine-readable result doc
-    (and writes it to ``json_path`` when given)."""
-    import jax
+    (and writes it to ``json_path`` when given).
 
-    from repro.core.arith import get_round_backend
-    from repro.ingest import Supervisor
-    from repro.stream import (EscalationPolicy, PrecisionRouter,
-                              StreamEngine, cough_pipeline, rpeak_pipeline)
+    ``fused``/``round_backend`` override the backend selection for this
+    run only (the A/B harness alternates them); ``None`` keeps the
+    process-wide setting.
+    """
+    from repro.core.arith import backend_overrides
 
     if transport not in ("inproc", "loopback", "tcp"):
         raise ValueError(f"unknown transport {transport!r}")
@@ -174,6 +192,24 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
         forest = build_forest()
         print(f"# forest trained in {time.perf_counter() - t0:.1f}s",
               file=sys.stderr)
+
+    with backend_overrides(
+            fused=None if fused is None else ("on" if fused else "off"),
+            round_backend=round_backend):
+        return _run_measured(patients, windows, max_batch, smoke,
+                             homogeneous, escalate, seed, json_path, forest,
+                             transport, stall, stall_timeout_s, pad_policy)
+
+
+def _run_measured(patients, windows, max_batch, smoke, homogeneous,
+                  escalate, seed, json_path, forest, transport, stall,
+                  stall_timeout_s, pad_policy):
+    import jax
+
+    from repro.core.arith import get_fused_kernels, get_round_backend
+    from repro.ingest import Supervisor
+    from repro.stream import (EscalationPolicy, PrecisionRouter,
+                              StreamEngine, cough_pipeline, rpeak_pipeline)
 
     rng = np.random.default_rng(seed)
     mixed = not homogeneous
@@ -236,9 +272,16 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
                    "homogeneous": homogeneous, "escalate": escalate,
                    "seed": seed, "backend": jax.default_backend(),
                    "round_backend": get_round_backend(),
+                   "fused_kernels": "on" if get_fused_kernels() else "off",
                    "transport": transport, "stall": stall,
-                   "pad_strategy": engine.pad_strategy()},
+                   "pad_strategy": engine.pad_strategy(),
+                   # wall-clock provenance of the groups' timing columns:
+                   # a single measured pass, unless the --ab harness
+                   # overrides them with its fused-arm medians
+                   "measured": "single_pass"},
         "groups": groups,
+        "ab": None,             # filled by the --ab paired harness
+        "smoke_baseline": None,  # filled by --smoke-baseline (CI perf gate)
         "escalation": {
             "patients": esc,
             "windows_escalated": esc_windows,
@@ -255,11 +298,60 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
                  "end_to_end_windows_per_s": n / wall},
     }
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(doc, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"# wrote {json_path}", file=sys.stderr)
+        write_json(doc, json_path)
     return doc
+
+
+def write_json(doc, json_path):
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {json_path}", file=sys.stderr)
+
+
+def run_ab(arms, repeat, forest, **kwargs):
+    """Paired A/B: ``repeat`` ALTERNATING full runs per arm (arm order
+    cycles within each round, so machine drift hits every arm equally),
+    per-group medians and the unfused/fused ratio."""
+    if repeat < 1:
+        raise ValueError(f"--repeat must be >= 1, got {repeat}")
+    for arm in arms:
+        if arm not in AB_ARMS:
+            raise ValueError(f"unknown A/B arm {arm!r} "
+                             f"(choose from {sorted(AB_ARMS)})")
+    passes = {arm: [] for arm in arms}
+    for r in range(repeat):
+        # rotate the start arm each round so monotonic machine drift
+        # (thermal ramp, cache warmup) doesn't systematically favour it
+        order = list(arms[r % len(arms):]) + list(arms[:r % len(arms)])
+        for arm in order:
+            fused_mode, rb = AB_ARMS[arm]
+            print(f"# ab pass {r + 1}/{repeat} arm={arm}", file=sys.stderr)
+            doc = run(forest=forest, fused=(fused_mode == "on"),
+                      round_backend=rb, **kwargs)
+            passes[arm].append(doc)
+    out = {"repeat": repeat, "arms": {}}
+    for arm, docs in passes.items():
+        groups = {}
+        for key in docs[0]["groups"]:
+            groups[key] = {
+                "us_per_window": _median(
+                    [d["groups"][key]["us_per_window"] for d in docs]),
+                "windows_per_s": _median(
+                    [d["groups"][key]["windows_per_s"] for d in docs]),
+            }
+        out["arms"][arm] = {
+            "groups": groups,
+            "wall_s": _median([d["wall"]["elapsed_s"] for d in docs]),
+        }
+    if "fused" in passes and "unfused" in passes:
+        out["ratio"] = {
+            key: (out["arms"]["unfused"]["groups"][key]["us_per_window"]
+                  / out["arms"]["fused"]["groups"][key]["us_per_window"])
+            for key in out["arms"]["fused"]["groups"]
+            if out["arms"]["fused"]["groups"][key]["us_per_window"]
+        }
+    return out
 
 
 def main():
@@ -297,6 +389,18 @@ def main():
                     default=None, metavar="PATH",
                     help="also write machine-readable results (default "
                          "PATH: BENCH_stream.json)")
+    ap.add_argument("--repeat", type=int, default=3, metavar="N",
+                    help="measured passes per A/B arm (with --ab; "
+                         "default 3)")
+    ap.add_argument("--ab", default=None, metavar="ARMS",
+                    help="paired A/B mode: comma list of backend arms to "
+                         "alternate (e.g. fused,unfused or "
+                         "fused,unfused,codec); medians of the alternating "
+                         "runs land in the JSON 'ab' block")
+    ap.add_argument("--smoke-baseline", action="store_true",
+                    help="additionally run a smoke-sized pass and embed "
+                         "its fleet row as the CI perf-gate baseline "
+                         "(benchmarks/check_perf.py)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     smoke_d, full_d = (8, 2, 8), (64, 4, 32)
@@ -307,13 +411,55 @@ def main():
                  else defaults[2])
     if patients < 2:
         ap.error("--patients must be ≥ 2 (one cough + one ECG arm)")
+    if args.ab and args.repeat < 1:
+        ap.error("--repeat must be ≥ 1")
+    if (args.ab or args.smoke_baseline) and not args.json:
+        ap.error("--ab/--smoke-baseline results only land in the JSON "
+                 "record: pass --json [PATH]")
 
-    doc = run(patients, windows, max_batch, smoke=args.smoke,
-              homogeneous=args.homogeneous, escalate=args.escalate,
-              seed=args.seed, json_path=args.json,
-              transport=args.transport, stall=args.stall,
-              stall_timeout_s=args.stall_timeout,
-              pad_policy=args.pad_policy)
+    forest = None
+    if args.ab or args.smoke_baseline:
+        t0 = time.perf_counter()
+        forest = build_forest()
+        print(f"# forest trained in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+    kwargs = dict(patients=patients, windows=windows, max_batch=max_batch,
+                  smoke=args.smoke, homogeneous=args.homogeneous,
+                  escalate=args.escalate, seed=args.seed,
+                  transport=args.transport, stall=args.stall,
+                  stall_timeout_s=args.stall_timeout,
+                  pad_policy=args.pad_policy)
+    doc = run(forest=forest, **kwargs)
+    if args.ab:
+        doc["ab"] = run_ab(args.ab.split(","), args.repeat, forest,
+                           **kwargs)
+        # the tracked baseline should be the most defensible number we
+        # have: when the paired harness measured the default (fused) arm,
+        # its alternating-run medians replace the single-pass timings
+        fused_arm = doc["ab"]["arms"].get("fused")
+        if fused_arm:
+            for key, med in fused_arm["groups"].items():
+                if key in doc["groups"]:
+                    doc["groups"][key].update(med)
+            doc["config"]["measured"] = "ab_fused_median"
+    if args.smoke_baseline:
+        # the CI gate runs `--smoke --json` in a COLD process (compile time
+        # included), so the baseline must be recorded the same way — a warm
+        # in-process pass would under-read by the whole jit-cache warmup
+        # and the gate would flake on every cold CI run
+        import subprocess
+        import tempfile
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "smoke_baseline.json")
+            subprocess.run([sys.executable, os.path.abspath(__file__),
+                            "--smoke", "--json", path,
+                            "--seed", str(args.seed)], check=True)
+            with open(path) as f:
+                sdoc = json.load(f)
+        doc["smoke_baseline"] = {"config": sdoc["config"],
+                                 "fleet": sdoc["groups"]["fleet"]}
+    if args.json:
+        write_json(doc, args.json)
     for key, row in doc["groups"].items():
         print(f"stream_bench/{key},{row['us_per_window']:.0f},"
               f"windows={row['windows']};"
@@ -338,6 +484,16 @@ def main():
           f"latency_p50_ms={tr['latency_ms']['p50']:.2f};"
           f"latency_p99_ms={tr['latency_ms']['p99']:.2f};"
           f"queue_dropped={tr['result_queue']['dropped']}")
+    if doc["ab"]:
+        arms = doc["ab"]["arms"]
+        for key in sorted(next(iter(arms.values()))["groups"]):
+            row = ";".join(
+                f"{arm}={arms[arm]['groups'][key]['us_per_window']:.0f}"
+                for arm in arms)
+            ratio = doc["ab"].get("ratio", {}).get(key)
+            if ratio is not None:
+                row += f";ratio={ratio:.2f}"
+            print(f"stream_bench/ab/{key},0,{row}")
 
 
 if __name__ == "__main__":

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.arith import Arith
+from repro.core.arith import Arith, fusion_cache_key
 from repro.data.biosignals import ECG_FS, ecg_dataset
 
 from .kmeans import kmeans_1d
@@ -107,19 +107,29 @@ def rpeak_window_scores(ar: Arith, windows: jnp.ndarray) -> jnp.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
-def _score_fn(fmt_name: str, n: int):
-    """jit-compiled stage 1-2 scores for one (format, window length)."""
+def _score_fn_cached(fmt_name: str, n: int, backend_key: tuple):
     ar = Arith.make(fmt_name)
     return jax.jit(lambda x: rpeak_window_scores(ar, x))
 
 
+def _score_fn(fmt_name: str, n: int):
+    """jit-compiled stage 1-2 scores for one (format, window length); keyed
+    on the backend selection so an A/B toggle retraces."""
+    return _score_fn_cached(fmt_name, n, fusion_cache_key())
+
+
 @functools.lru_cache(maxsize=None)
-def _kmeans_fn(fmt_name: str, n: int, warm: bool):
-    """jit-compiled 2-means for one (format, reservoir length, warm-start)."""
+def _kmeans_fn_cached(fmt_name: str, n: int, warm: bool,
+                      backend_key: tuple):
     ar = Arith.make(fmt_name)
     if warm:
         return jax.jit(lambda x, init: kmeans_1d(ar, x, k=2, init=init))
     return jax.jit(lambda x: kmeans_1d(ar, x, k=2))
+
+
+def _kmeans_fn(fmt_name: str, n: int, warm: bool):
+    """jit-compiled 2-means for one (format, reservoir length, warm-start)."""
+    return _kmeans_fn_cached(fmt_name, n, warm, fusion_cache_key())
 
 
 # ---------------------------------------------------------------------------

@@ -26,12 +26,14 @@ FFT_N = 4096
 def extract_features(ar: Arith, audio: jax.Array, imu: jax.Array) -> jax.Array:
     """audio: (B, 2, N) PCM-scale; imu: (B, 9, M). → (B, F) features."""
     B = audio.shape[0]
-    a = ar.rnd(audio)
     # crop/zero-pad to the 4096-point FFT (the paper's §VI-B kernel size)
-    a = a[..., :FFT_N]
+    # BEFORE the ingest rounding: rnd is elementwise and rnd(0) == 0, so
+    # the bits match round-then-crop while never rounding dropped samples
+    a = audio[..., :FFT_N]
     pad = FFT_N - a.shape[-1]
     if pad > 0:
         a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+    a = ar.rnd(a)
     psd = dsp.power_spectrum(ar, a)               # (B, 2, FFT_N/2+1)
     spec = dsp.spectral_features(ar, psd, AUDIO_SR)   # (B, 2, 6)
     mf = dsp.mfcc(ar, psd, AUDIO_SR)              # (B, 2, 13)

@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.arith import Arith
+from repro.core.arith import Arith, get_fused_kernels, get_round_backend
 
 
 # ---------------------------------------------------------------------------
@@ -130,6 +130,73 @@ def _to_natural(z_re, z_im, transposed: bool):
     return z_re, z_im
 
 
+# ---------------------------------------------------------------------------
+# Fused stage loop: the whole (batch, n) plane of one Stockham stage in one
+# launch.  State is STACKED — z has shape (2, ..., L, R) with axis 0 the
+# (re, im) planes — so each stage is three rounded calls instead of ten:
+#
+#   P  = rnd([wr·o_re, wi·o_im, wr·o_im, wi·o_re])   (4 half-planes, 1 call)
+#   t  = rnd([P0 − P1, P2 + P3])                     (t_re, t_im, 1 call)
+#   z' = rnd(concat([e + t, e − t]))                 (u ++ v: the stage JOIN
+#                                                     fuses into the rounding)
+#
+# Identical elementary rounded ops in the identical order as `_butterfly` —
+# elementwise chains are bitwise deterministic, so the fused loop is
+# bit-identical to the unfused oracle (tests/test_fused_backend.py).  Under
+# the pallas round backend the posit stage runs as one `posit_butterfly`
+# kernel launch over the whole plane, twiddles broadcast from the plan
+# constants (interpret-mode fallback off-TPU).
+# ---------------------------------------------------------------------------
+
+def _fused_stage(ar: Arith, z: jax.Array, wr_np: np.ndarray,
+                 wi_np: np.ndarray, R: int, tr: bool) -> jax.Array:
+    nb = z.ndim - 3                        # batch dims between stack and L/R
+    if tr:
+        e, o = z[..., : R // 2], z[..., R // 2:]
+    else:
+        e, o = z[..., : R // 2, :], z[..., R // 2:, :]
+    if get_round_backend() == "pallas":
+        from repro.kernels.posit_round import posit_butterfly
+        shp = (*([1] * nb), -1, 1) if tr else (*([1] * nb), 1, -1)
+        wr = jnp.asarray(wr_np).reshape(shp)
+        wi = jnp.asarray(wi_np).reshape(shp)
+        u_re, u_im, v_re, v_im = posit_butterfly(
+            e[0], e[1], o[0], o[1], wr, wi, ar.fmt)
+        ax = -2 if tr else -1
+        return jnp.stack([jnp.concatenate([u_re, v_re], axis=ax),
+                          jnp.concatenate([u_im, v_im], axis=ax)])
+    rnd = ar.rnd
+    # products without gathering o: [wr·o_re, wi·o_im] = [wr, wi]⊙o and
+    # [wi·o_re, wr·o_im] = [wi, wr]⊙o, so P = [P0, P1, P3, P2] (the swapped
+    # t_im order is free — f32 addition commutes bitwise)
+    w2 = jnp.asarray(np.stack([wr_np, wi_np]))
+    w2f = jnp.asarray(np.stack([wi_np, wr_np]))
+    shp = (2, *([1] * nb), -1, 1) if tr else (2, *([1] * nb), 1, -1)
+    P = rnd(jnp.concatenate([w2.reshape(shp) * o, w2f.reshape(shp) * o],
+                            axis=0))
+    t = rnd(jnp.stack([P[0] - P[1], P[3] + P[2]]))
+    return rnd(jnp.concatenate([e + t, e - t], axis=-2 if tr else -1))
+
+
+def _fused_final_rstage(ar: Arith, z: jax.Array, plan: FFTPlan
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Pruned final stage of the real-input split (natural layout): only u
+    (bins 0..n/2−1) and v[0] (Nyquist) are computed — same stacked shapes,
+    same rounded ops as the kept lanes of a full stage."""
+    rnd = ar.rnd
+    wr_np, wi_np = plan.stages[-1]
+    wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
+    e_re, o_re = z[0, ..., 0, :], z[0, ..., 1, :]
+    e_im, o_im = z[1, ..., 0, :], z[1, ..., 1, :]
+    P = rnd(jnp.stack([wr * o_re, wi * o_im, wr * o_im, wi * o_re]))
+    t = rnd(jnp.stack([P[0] - P[1], P[2] + P[3]]))
+    u = rnd(jnp.stack([e_re + t[0], e_im + t[1]]))
+    ny = rnd(jnp.stack([e_re[..., :1] - t[0][..., :1],
+                        e_im[..., :1] - t[1][..., :1]]))
+    return (jnp.concatenate([u[0], ny[0]], axis=-1),
+            jnp.concatenate([u[1], ny[1]], axis=-1))
+
+
 def fft_format(ar: Arith, re: jax.Array, im: jax.Array
                ) -> Tuple[jax.Array, jax.Array]:
     """Iterative radix-2 FFT over the last axis, every op rounded.
@@ -137,10 +204,39 @@ def fft_format(ar: Arith, re: jax.Array, im: jax.Array
     Twiddles are stored in the target format (table-based, as on PHEE).
     Self-sorting Stockham stage layout: the same butterflies on the same
     operand values as the classic bit-reversed DIT (bit-identical output),
-    with no input permutation and contiguous stage splits/joins.
+    with no input permutation and contiguous stage splits/joins.  The
+    fused stage loop (default) runs each stage as one launch over the
+    whole plane; ``REPRO_FUSED_KERNELS=off`` selects the retained per-op
+    oracle — bit-identical either way.
     """
     n = re.shape[-1]
     plan = get_fft_plan(n, ar.name, str(re.dtype))
+    if not (get_fused_kernels() and ar.is_posit):
+        # IEEE/fp32: rounding is a single convert, so the per-op loop IS
+        # the fused-optimal shape — XLA folds each butterfly into tight
+        # loops, and the stacked regrouping only pays where the rounding
+        # chain is ~30 integer ops per element (posits; measured 3.8×
+        # SLOWER for fp16 when stacked)
+        return _fft_unfused(ar, re, im, plan)
+    z = ar.rnd(jnp.stack([re, im]))[..., None, :]   # (2, ..., L=1, n)
+    tr = True
+    for t, (wr_np, wi_np) in enumerate(plan.stages):
+        R = n >> t
+        if tr and R // 2 < _MIN_RUN:
+            z = jnp.swapaxes(z, -1, -2)
+            tr = False
+        z = _fused_stage(ar, z, wr_np, wi_np, R, tr)
+    if tr:
+        z = jnp.swapaxes(z, -1, -2)                 # (2, ..., 1, n)
+    z = z.reshape(2, *z.shape[1:-2], n)
+    return z[0], z[1]
+
+
+def _fft_unfused(ar: Arith, re: jax.Array, im: jax.Array, plan: FFTPlan
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """The per-op stage loop (6 separately-rounded jnp ops per butterfly) —
+    the retained oracle the fused loop is property-tested against."""
+    n = re.shape[-1]
     zr = ar.rnd(re)[..., None, :]          # transposed start: (..., L=1, n)
     zi = ar.rnd(im)[..., None, :]
     tr = True
@@ -178,6 +274,48 @@ def rfft_format(ar: Arith, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     if plan.levels < 3:  # tiny sizes: no stages left to prune
         re, im = fft_format(ar, x, jnp.zeros_like(x))
         return re[..., : n // 2 + 1], im[..., : n // 2 + 1]
+    if get_fused_kernels() and ar.is_posit:
+        return _rfft_fused(ar, x, plan)
+    return _rfft_unfused(ar, x, plan)
+
+
+def _rfft_fused(ar: Arith, x: jax.Array, plan: FFTPlan
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Stacked one-launch-per-stage realization of the posit rfft split —
+    bit-identical to ``_rfft_unfused`` (same collapses, same rounded ops).
+    IEEE formats never come here: their honest-poisoning butterflies stay
+    on the per-op loop, which is their fused-optimal shape (see
+    ``fft_format``)."""
+    n = x.shape[-1]
+    rnd = ar.rnd
+    tr = True
+    zr = rnd(x)[..., None, :]              # transposed start: (..., 1, n)
+    # stage 1: pure real add/sub butterfly, join fused into the rounding
+    e, o = zr[..., : n // 2], zr[..., n // 2:]
+    zr = rnd(jnp.concatenate([e + o, e - o], axis=-2))
+    # stage 2: t = (wr·o, wi·o); u_im = t_im, v_im = −t_im (exact)
+    R = n >> 1
+    wr = jnp.asarray(plan.stages[1][0])[:, None]
+    wi = jnp.asarray(plan.stages[1][1])[:, None]
+    e, o = zr[..., : R // 2], zr[..., R // 2:]
+    t = rnd(jnp.stack([wr * o, wi * o]))
+    z = jnp.stack([rnd(jnp.concatenate([e + t[0], e - t[0]], axis=-2)),
+                   jnp.concatenate([t[1], -t[1]], axis=-2)])
+    start = 2
+    for t in range(start, plan.levels - 1):
+        R = n >> t
+        if tr and R // 2 < _MIN_RUN:
+            z = jnp.swapaxes(z, -1, -2)
+            tr = False
+        z = _fused_stage(ar, z, *plan.stages[t], R, tr)
+    if tr:
+        z = jnp.swapaxes(z, -1, -2)
+    return _fused_final_rstage(ar, z, plan)
+
+
+def _rfft_unfused(ar: Arith, x: jax.Array, plan: FFTPlan
+                  ) -> Tuple[jax.Array, jax.Array]:
+    n = x.shape[-1]
     zr = ar.rnd(x)[..., None, :]           # transposed start: (..., 1, n)
     tr = True
 
@@ -247,15 +385,21 @@ def power_spectrum(ar: Arith, x: jax.Array) -> jax.Array:
 
 
 def spectral_features(ar: Arith, psd: jax.Array, sr: float) -> jax.Array:
-    """Centroid, rolloff (85%), flatness-proxy, band energies."""
+    """Centroid, rolloff (85%), flatness-proxy, band energies.
+
+    One rounded prefix-sum pass serves both the rolloff threshold AND the
+    total spectral energy (its last prefix) — the total is no longer a
+    second rounded reduction over the same bins.  The centroid numerator
+    is a quire-fused ``Arith.matmul`` row (posit: one rounding; IEEE:
+    per-MAC, bit-identical to the former mul+sum chain).
+    """
     n = psd.shape[-1]
     freqs = jnp.asarray(np.linspace(0, sr / 2, n), psd.dtype)
-    total = ar.sum(psd, axis=-1)
-    total = jnp.maximum(total, 1e-20)
-    centroid = ar.div(ar.sum(ar.mul(psd, freqs), axis=-1), total)
     # rolloff threshold math in the target arithmetic (format parity):
     # rounded prefix energies against a rounded 0.85·total threshold
     cum = ar.cumsum(psd, axis=-1)
+    total = jnp.maximum(cum[..., -1], 1e-20)
+    centroid = ar.div(ar.matmul(psd, freqs[:, None])[..., 0], total)
     thr = ar.mul(ar.rnd(jnp.asarray(0.85, psd.dtype)), cum[..., -1:])
     roll_idx = jnp.argmax(cum >= thr, axis=-1)
     rolloff = freqs[roll_idx]
@@ -302,16 +446,22 @@ def _mel_filterbank(n: int, sr: float, n_mel: int, fmt_name: str,
 
 
 def _dct2(ar: Arith, x: jax.Array, k: int) -> jax.Array:
-    basis = jnp.asarray(_dct_basis(x.shape[-1], k, ar.name, str(x.dtype)))
-    return ar.rnd(jnp.einsum("kn,...n->...k", basis, x))
+    basis = _dct_basis(x.shape[-1], k, ar.name, str(x.dtype))
+    return ar.matmul(x, jnp.asarray(basis.T))
 
 
 def mfcc(ar: Arith, psd: jax.Array, sr: float, n_mel: int = 20,
          n_coef: int = 13) -> jax.Array:
-    """Mel-frequency cepstral coefficients from a (rounded) PSD."""
-    fbq = jnp.asarray(_mel_filterbank(psd.shape[-1], sr, n_mel, ar.name,
-                                      str(psd.dtype)))
-    energies = ar.rnd(jnp.einsum("mn,...n->...m", fbq, psd))
+    """Mel-frequency cepstral coefficients from a (rounded) PSD.
+
+    Filterbank and DCT-II rows run through ``Arith.matmul``: posit formats
+    keep the quire semantics (one wide product per output, rounded once —
+    the same bits as the previous rounded einsum), IEEE formats now round
+    after every MAC like every other reduction (they have no quire; the
+    former single-rounding einsum understated their accumulation error).
+    """
+    fbq = _mel_filterbank(psd.shape[-1], sr, n_mel, ar.name, str(psd.dtype))
+    energies = ar.matmul(psd, jnp.asarray(fbq.T))
     log_e = ar.log(jnp.maximum(energies, 1e-20))
     return _dct2(ar, log_e, n_coef)
 

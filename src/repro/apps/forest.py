@@ -99,4 +99,8 @@ def forest_predict(ar: Arith, forest: Forest, X: jax.Array) -> jax.Array:
         nxt = jnp.where(go_left, 2 * node + 1, 2 * node + 2)
         node = jnp.where(f < 0, node, nxt)
     probs = value[jnp.arange(T)[None], node]            # (B, T)
-    return ar.mean(probs, axis=-1)
+    # vote aggregation as a rounded matmul row: ×1 products are exact, so
+    # the posit corner is one quire accumulation rounded once and the IEEE
+    # corner the usual per-MAC chain — one kernel launch either way
+    votes = ar.matmul(probs, jnp.ones((T, 1), probs.dtype))[..., 0]
+    return ar.div(votes, float(T))

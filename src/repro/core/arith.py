@@ -10,9 +10,23 @@ tests against the exact oracle on random vectors).
 
 The apps (FFT, MFCC, random forest, k-means, BayeSlope) are written against
 this interface, so a single ``--format`` flag sweeps every arithmetic.
+
+Two orthogonal switches control how the rounded ops are realized (the full
+matrix is documented in ``repro/kernels/README.md``):
+
+* ``REPRO_ROUND_BACKEND`` — how a single posit rounding is computed
+  (direct float-bit ``jnp``, fused Pallas kernel, or the codec oracle);
+* ``REPRO_FUSED_KERNELS`` — whether multi-op hot paths (IEEE sequential
+  reductions here; the FFT stage loop and matmul routing in ``apps.dsp``)
+  run through their fused one-launch-per-stage realizations or through the
+  retained element-per-step oracles.  Fused and unfused paths are
+  bit-identical by construction (``tests/test_fused_backend.py``): fusion
+  regroups the SAME elementary rounded ops, it never reassociates a wide
+  reduction.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from typing import Union
@@ -46,6 +60,63 @@ def get_round_backend() -> str:
     if _round_backend != "auto":
         return _round_backend
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+# -- fused-kernel switch ------------------------------------------------------
+# "on"   — hot loops run their fused shapes: block-unrolled IEEE reductions
+#          here, the stacked one-launch-per-stage FFT butterflies and the
+#          Arith.matmul kernel routing in apps/dsp + kernels/.
+# "off"  — the retained oracles: element-per-step lax.scan reductions, the
+#          per-op butterfly loop.  Bit-identical to "on" everywhere.
+# "auto" — "on" (both CPU and TPU profit; "off" exists for A/B evidence
+#          and as the oracle arm of the property suite).
+_FUSED_MODES = ("auto", "on", "off")
+_fused_kernels = os.environ.get("REPRO_FUSED_KERNELS", "auto")
+
+# Fused IEEE reductions unroll chains up to this length completely (no scan
+# launch); longer chains keep the element-per-step scan, which measured
+# faster than every blocked unroll on XLA CPU (see _ieee_accumulate).
+_REDUCE_BLOCK = int(os.environ.get("REPRO_REDUCE_BLOCK", "64"))
+
+
+def set_fused_kernels(name: str) -> None:
+    """Select fused ("on") vs oracle ("off") hot-path realizations."""
+    if name not in _FUSED_MODES:
+        raise ValueError(f"fused mode {name!r} not in {_FUSED_MODES}")
+    global _fused_kernels
+    _fused_kernels = name
+
+
+def get_fused_kernels() -> bool:
+    """The effective fused switch after resolving ``auto``."""
+    return _fused_kernels != "off"
+
+
+def fusion_cache_key() -> tuple:
+    """Key component for jit caches whose traces bake in the backend
+    selection — include it wherever a compiled fn is memoized so an A/B
+    toggle (``set_fused_kernels`` / ``set_round_backend``) retraces."""
+    return (get_round_backend(), get_fused_kernels())
+
+
+@contextlib.contextmanager
+def backend_overrides(fused: str = None, round_backend: str = None):
+    """Temporarily select backend realizations (the A/B harness's hook).
+
+    Saves the RAW (unresolved) modes and restores them through the public
+    setters on every exit path, so a bad override name can never leak a
+    half-applied selection into process-global state.
+    """
+    prev_fused, prev_rb = _fused_kernels, _round_backend
+    try:
+        if fused is not None:
+            set_fused_kernels(fused)
+        if round_backend is not None:
+            set_round_backend(round_backend)
+        yield
+    finally:
+        set_fused_kernels(prev_fused)
+        set_round_backend(prev_rb)
 
 
 def _round_posit_dispatch(x: jax.Array, fmt: PositFormat) -> jax.Array:
@@ -132,37 +203,63 @@ class Arith:
         return self.rnd(jnp.tanh(jnp.asarray(a)))
 
     # -- fused reductions (quire semantics: single rounding) ------------------
+    #
+    # IEEE formats have no quire: the paper's baselines round after every
+    # partial add.  That sequential rounded chain is realized two ways with
+    # IDENTICAL bits (elementwise rounded ops are deterministic; only a wide
+    # reduction op would be free to reassociate, and none is used here):
+    #   * oracle (fused off): lax.scan, one element per step;
+    #   * fused  (fused on):  short chains (K ≤ _REDUCE_BLOCK — forest
+    #     votes, DCT rows, matmul tails) unroll completely, eliding the
+    #     scan launch and its per-step carry shuffling.  Long chains KEEP
+    #     the element-per-step scan: on XLA CPU every larger unroll block
+    #     measured slower than the scan's tight compiled loop (2.6–12 ms
+    #     vs 0.95 ms on the spectral cumsum shape), so the honest fused
+    #     realization of a long sequential chain IS the scan.
+
+    def _ieee_accumulate(self, moved: jax.Array, keep_prefixes: bool):
+        """Rounded sequential accumulation over axis 0 of ``moved``.
+
+        Returns the final accumulator, or every prefix (``cumsum``) when
+        ``keep_prefixes``.
+        """
+        K = moved.shape[0]
+        acc0 = jnp.zeros(moved.shape[1:], moved.dtype)
+        if get_fused_kernels() and K <= _REDUCE_BLOCK:
+            acc, outs = acc0, []
+            for k in range(K):                 # fully unrolled, same order
+                acc = self.rnd(acc + moved[k])
+                outs.append(acc)
+            if keep_prefixes:
+                return (jnp.stack(outs) if outs else jnp.zeros_like(moved))
+            return acc
+
+        def step(acc, p):
+            acc = self.rnd(acc + p)
+            return acc, acc if keep_prefixes else None
+
+        acc, out = jax.lax.scan(step, acc0, moved)
+        return out if keep_prefixes else acc
+
     def dot(self, a, b, axis=-1):
         """Quire-fused dot: inputs are format values, one rounding at the end.
 
         For IEEE formats (which have no quire) the paper's baselines
-        accumulate in the same format — reproduce that with a rounded scan.
+        accumulate in the same format — reproduce that with the sequential
+        rounded accumulation above.
         """
         a, b = jnp.asarray(a), jnp.asarray(b)
         if self.is_posit or self.exact:
             return self.rnd(jnp.sum(a * b, axis=axis))
         # IEEE: round after every MAC (no fused accumulator available).
         prod = self.rnd(a * b)
-        moved = jnp.moveaxis(prod, axis, 0)
-
-        def step(acc, p):
-            return self.rnd(acc + p), None
-
-        acc0 = jnp.zeros_like(moved[0])
-        acc, _ = jax.lax.scan(step, acc0, moved)
-        return acc
+        return self._ieee_accumulate(jnp.moveaxis(prod, axis, 0), False)
 
     def sum(self, a, axis=-1):
         a = jnp.asarray(a)
         if self.is_posit or self.exact:
             return self.rnd(jnp.sum(a, axis=axis))
-        moved = jnp.moveaxis(a, axis, 0)
-
-        def step(acc, p):
-            return self.rnd(acc + p), None
-
-        acc, _ = jax.lax.scan(step, jnp.zeros_like(moved[0]), moved)
-        return acc
+        return self._ieee_accumulate(jnp.moveaxis(a, axis, 0), False)
 
     def cumsum(self, a, axis=-1):
         """Rounded prefix sums: for posits each prefix is one quire-fused
@@ -171,16 +268,46 @@ class Arith:
         a = jnp.asarray(a)
         if self.is_posit or self.exact:
             return self.rnd(jnp.cumsum(a, axis=axis))
-        moved = jnp.moveaxis(a, axis, 0)
-
-        def step(acc, p):
-            acc = self.rnd(acc + p)
-            return acc, acc
-
-        _, out = jax.lax.scan(step, jnp.zeros_like(moved[0]), moved)
+        out = self._ieee_accumulate(jnp.moveaxis(a, axis, 0), True)
         return jnp.moveaxis(out, 0, axis)
 
     def mean(self, a, axis=-1):
         a = jnp.asarray(a)
         cnt = a.shape[axis] if axis is not None else a.size
         return self.div(self.sum(a, axis=axis), float(cnt))
+
+    def matmul(self, a, b):
+        """Rounded matrix product: ``a (..., K) · b (K, N) → (..., N)``.
+
+        * posit: the quire analogue — ONE wide f32 product (the device
+          matmul; batch dims flattened onto rows) rounded once per output.
+          On the jnp path, fused and oracle arms share the identical
+          ``a @ b`` graph, so the wide accumulation order — an XLA/device
+          choice — cancels out of the bit-identity contract and only the
+          (exhaustively verified) rounding realization differs.  Under the
+          pallas round backend the product+rounding run in one
+          ``kernels.posit_matmul`` launch whose K-whole tiled dot is a
+          DIFFERENT wide graph: its rounding fusion is verified against
+          its own ``do_round=False`` escape, and its wide product vs
+          ``a @ b`` is a device detail (see kernels/README.md) — the
+          fused==oracle bit guarantee is scoped to same-wide-graph pairs.
+        * IEEE: no quire — round after every MAC, sequentially along K
+          (``_ieee_accumulate``), bit-identical to a per-row ``dot``.
+        * fp32: exact, the plain device matmul.
+        """
+        a, b = jnp.asarray(a), jnp.asarray(b)
+        K, N = b.shape
+        batch = a.shape[:-1]
+        if self.is_posit or self.exact:
+            rows = 1
+            for d in batch:
+                rows *= d
+            a2 = a.reshape(rows, K)
+            if (self.is_posit and get_round_backend() == "pallas"
+                    and get_fused_kernels()):
+                from repro.kernels.posit_matmul import rounded_matmul
+                wide = rounded_matmul(a2, b, self.fmt)
+                return wide.reshape(*batch, N)
+            return self.rnd((a2 @ b).reshape(*batch, N))
+        prod = self.rnd(a[..., :, None] * b)           # (..., K, N)
+        return self._ieee_accumulate(jnp.moveaxis(prod, -2, 0), False)

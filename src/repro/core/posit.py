@@ -245,16 +245,22 @@ def round_posit_math(x: jax.Array, fmt: PositFormat) -> jax.Array:
 
     q = (m >> U(mbits)).astype(jnp.int32) - bias          # power-of-two scale
     r = q >> es                                           # regime value
-    nr = jnp.where(r >= 0, r + 2, 1 - r)                  # regime bit count
+    # regime bit count, branchless: r>=0 → r+2; r<0 → 1-r == (~r)+2
+    nr = (r ^ (r >> 31)) + 2
     drop = nr + (tbits - (n - 1))                         # == encode's shift
-    dropc = jnp.clip(drop, 1, tbits).astype(U)
+    if 2 + tbits - (n - 1) >= 1:          # narrow formats: drop >= 1 always
+        dropc = jnp.minimum(drop, tbits).astype(U)
+    else:
+        dropc = jnp.clip(drop, 1, tbits).astype(U)
 
     adj = m + U(1 << mbits)                               # bias+1 alignment
     half_ulp = U(1) << (dropc - U(1))
+    # pure-regime patterns (drop >= tbits): the last kept bit is the
+    # regime's low bit — 0 for r >= 0, 1 for r < 0 (r's sign bit)
     lsb = jnp.where(drop < tbits,
                     (adj >> dropc) & U(1),
-                    jnp.where(r >= 0, U(0), U(1)))
-    rounded = (adj + (half_ulp - U(1)) + lsb) & ~(U(2) * half_ulp - U(1))
+                    ((r >> 31).astype(U)) & U(1))
+    rounded = (adj + (half_ulp - U(1)) + lsb) & ~((half_ulp << U(1)) - U(1))
     out = rounded - U(1 << mbits)
     if 2 + tbits - (n - 1) < 1:                           # only wide posits
         out = jnp.where(drop >= 1, out, m)                # can be exact

@@ -123,6 +123,17 @@ def fft_energy_saving_fraction(nonasm: bool = False) -> float:
 
 @dataclasses.dataclass
 class OpCounts:
+    """Arithmetic ops of one workload, as billed to the paper's datapath.
+
+    Counts are defined by the SEMANTIC rounded-op sequence of the kernels
+    (`Arith` contract), never by the realization that executes it: fusing
+    the FFT stage loop, blocking a reduction, or batching a matmul into one
+    kernel launch regroups the same elementary ops, so op counts — and
+    therefore nJ/window — are invariant under `REPRO_FUSED_KERNELS` /
+    `REPRO_ROUND_BACKEND` by construction (asserted in
+    tests/test_energy_model.py).
+    """
+
     add: int = 0
     mul: int = 0
     div: int = 0
@@ -131,6 +142,13 @@ class OpCounts:
 
     def total(self) -> int:
         return self.add + self.mul + self.div + self.sqrt + self.conv
+
+    def roundings(self) -> int:
+        """Rounding events: on the PRAU every elementary op rounds once
+        (conversions ARE roundings), so this equals ``total()`` — exposed
+        separately so the backend-invariance tests can name the quantity
+        they pin."""
+        return self.total()
 
 
 def estimate_app_energy_nj(ops: OpCounts, config: str = "coprosit",

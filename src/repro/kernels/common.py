@@ -1,5 +1,6 @@
 """Shared in-kernel posit bit math (Pallas-safe: no lax.clz — uses the
-smear+popcount idiom, which lowers to TPU vector ops)."""
+smear+popcount idiom, which lowers to TPU vector ops) and the common
+tile-padding helper the arbitrary-shape kernel wrappers use."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -8,6 +9,28 @@ from jax import lax
 from repro.core.formats import PositFormat
 
 _U32 = jnp.uint32
+
+
+def pad_to_tiles(x, block_rows: int = 512):
+    """Flatten to (rows, 128) tiles whose row count the block size divides.
+
+    Row counts below ``block_rows`` round up to the f32 sublane multiple
+    (8) and become the block themselves; larger ones round up to a whole
+    number of ``block_rows`` blocks, so the kernels' grid assertions
+    always hold.  Returns ``(tiles, n, bm)`` — the padded (rows, 128)
+    plane, the original element count, and the block size to launch with.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // 128)
+    if rows >= block_rows:
+        rows_p, bm = -(-rows // block_rows) * block_rows, block_rows
+    else:
+        rows_p = bm = -(-rows // 8) * 8
+    pad = rows_p * 128 - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows_p, 128), n, bm
 
 
 def clz32(x):

@@ -15,7 +15,8 @@ from repro.core.formats import PositFormat
 
 from .posit_decode import posit_decode_2d
 from .posit_encode import posit_encode_2d
-from .posit_matmul import posit_matmul
+from .posit_matmul import posit_matmul, rounded_matmul
+from .posit_round import posit_butterfly
 from .posit_kv_attention import posit_kv_attention
 
 
@@ -53,6 +54,17 @@ def encode(x: jax.Array, fmt: PositFormat):
 
 def matmul(a_bits: jax.Array, b_bits: jax.Array, fmt: PositFormat, **kw):
     return posit_matmul(a_bits, b_bits, fmt, interpret=_interpret(), **kw)
+
+
+def matmul_rounded(a: jax.Array, b: jax.Array, fmt: PositFormat, **kw):
+    """Fused round_fmt(a·b) on float values (the Arith.matmul quire path)."""
+    return rounded_matmul(a, b, fmt, interpret=_interpret(), **kw)
+
+
+def butterfly(e_re, e_im, o_re, o_im, w_re, w_im, fmt: PositFormat):
+    """One fused rounded radix-2 butterfly over whole broadcastable planes."""
+    return posit_butterfly(e_re, e_im, o_re, o_im, w_re, w_im, fmt,
+                           interpret=_interpret())
 
 
 def kv_attention(q: jax.Array, k_bits: jax.Array, v_bits: jax.Array,

@@ -32,6 +32,8 @@ from jax.experimental import pallas as pl
 from repro.core.formats import PositFormat
 from repro.core.posit import round_posit_math
 
+from .common import pad_to_tiles as _pad_2d
+
 
 def _round_kernel(x_ref, out_ref, *, fmt: PositFormat):
     out_ref[...] = round_posit_math(x_ref[...], fmt)
@@ -120,26 +122,6 @@ def posit_butterfly_2d(e_re, e_im, o_re, o_im, w_re, w_im,
     )(e_re, e_im, o_re, o_im, w_re, w_im)
 
 
-def _pad_2d(x: jax.Array, block_rows: int = 512):
-    """Flatten to (rows, 128) tiles whose row count the block size divides.
-
-    Row counts below ``block_rows`` round up to the f32 sublane multiple
-    (8) and become the block themselves; larger ones round up to a whole
-    number of ``block_rows`` blocks, so the grid assertions always hold.
-    """
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    rows = -(-n // 128)
-    if rows >= block_rows:
-        rows_p, bm = -(-rows // block_rows) * block_rows, block_rows
-    else:
-        rows_p = bm = -(-rows // 8) * 8
-    pad = rows_p * 128 - n
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(rows_p, 128), n, bm
-
-
 def posit_round(x: jax.Array, fmt: PositFormat,
                 interpret: bool | None = None) -> jax.Array:
     """Arbitrary-shape fused round (reshaped onto (rows, 128) tiles)."""
@@ -164,3 +146,26 @@ def posit_fma_round(a: jax.Array, b: jax.Array, c: jax.Array,
     out = posit_fma_round_2d(am, bmat, cmat, fmt, block_rows=bm,
                              interpret=interpret)
     return out.reshape(-1)[:n].reshape(a.shape)
+
+
+def posit_butterfly(e_re, e_im, o_re, o_im, w_re, w_im, fmt: PositFormat,
+                    interpret: bool | None = None):
+    """Arbitrary-shape batched rounded butterfly: one launch per FFT stage.
+
+    Broadcasts the six operands together (the stage loop passes whole
+    (batch, …, L, R/2) planes with the plan's twiddle constants broadcast
+    along the run axis), flattens them onto the (rows, 128) f32 tiles of
+    ``posit_butterfly_2d``, and unpads the four outputs.  Padding lanes
+    compute garbage butterflies that are sliced away — the kernel body is
+    elementwise, so real lanes are unaffected.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    arrs = jnp.broadcast_arrays(e_re, e_im, o_re, o_im, w_re, w_im)
+    shape = arrs[0].shape
+    mats, n, bm = [], None, None
+    for a in arrs:
+        m, n, bm = _pad_2d(a)
+        mats.append(m)
+    outs = posit_butterfly_2d(*mats, fmt, block_rows=bm, interpret=interpret)
+    return tuple(o.reshape(-1)[:n].reshape(shape) for o in outs)

@@ -52,7 +52,8 @@ def cough_window_op_counts(fft_n: int = 4096, n_mel: int = 20,
     # |X|² PSD: 2 mul + 1 add per bin
     ops.mul += audio_ch * 2 * bins
     ops.add += audio_ch * bins
-    # spectral stats: centroid MAC + total + 4 band sums ≈ 3 passes
+    # spectral stats: rolloff prefix sums (whose last prefix IS the total)
+    # + centroid MAC + 4 band sums ≈ 3 add passes + 1 mul pass
     ops.add += audio_ch * 3 * bins
     ops.mul += audio_ch * bins
     ops.div += audio_ch * 6
@@ -67,11 +68,15 @@ def cough_window_op_counts(fft_n: int = 4096, n_mel: int = 20,
     ops.mul += imu_ch * n_imu * 3
     ops.div += imu_ch * 6
     ops.sqrt += imu_ch
-    # forest vote aggregation (tree walks are gathers + int compares)
+    # forest vote aggregation: one MAC per tree (tree walks are gathers +
+    # int compares), mean division
     ops.add += n_trees
+    ops.mul += n_trees
     ops.div += 1
-    # ingest conversions: every raw sample enters the storage format once
-    ops.conv += audio_ch * int(round(AUDIO_SR * WINDOW_S)) + imu_ch * n_imu
+    # ingest conversions: every sample the window core CONSUMES enters the
+    # storage format once — audio is cropped to the FFT size before the
+    # ingest rounding, so the cropped tail never touches the datapath
+    ops.conv += audio_ch * fft_n + imu_ch * n_imu
     return ops
 
 

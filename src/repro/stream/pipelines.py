@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.apps.bayeslope import RPEAK_WINDOW_S, rpeak_window_scores
 from repro.apps.cough import make_cough_scorer
 from repro.apps.forest import Forest
-from repro.core.arith import Arith
+from repro.core.arith import Arith, fusion_cache_key
 from repro.data.biosignals import AUDIO_SR, ECG_FS, IMU_SR, WINDOW_S
 from repro.energy.model import OpCounts
 
@@ -76,7 +76,7 @@ class Pipeline:
 
 def cough_pipeline(forest: Forest) -> Pipeline:
     @functools.lru_cache(maxsize=None)
-    def make_fn(fmt: str):
+    def make_fn_cached(fmt: str, backend_key: tuple):
         # memoized per pipeline instance: engines sharing one Pipeline
         # (e.g. a transport engine and its in-process parity reference)
         # share the compiled function instead of re-tracing per engine
@@ -90,6 +90,9 @@ def cough_pipeline(forest: Forest) -> Pipeline:
 
         return _jit_batch_fn(fn)
 
+    def make_fn(fmt: str):
+        return make_fn_cached(fmt, fusion_cache_key())
+
     # bill energy for the forest actually deployed, not the default size
     ops = cough_window_op_counts(n_trees=forest.feat.shape[0],
                                  depth=forest.depth)
@@ -97,10 +100,8 @@ def cough_pipeline(forest: Forest) -> Pipeline:
 
 
 @functools.lru_cache(maxsize=None)
-def _rpeak_batch_fn(fmt: str, peak_threshold: float, refr: int):
-    """Compiled-batch-fn cache shared across Pipeline/engine instances —
-    re-creating an engine (benchmark warmups, property tests streaming one
-    record many ways) reuses the jit cache instead of re-tracing."""
+def _rpeak_batch_fn_cached(fmt: str, peak_threshold: float, refr: int,
+                           backend_key: tuple):
     ar = Arith.make(fmt)
 
     def one_window(sig: jax.Array) -> Dict[str, jax.Array]:
@@ -125,6 +126,16 @@ def _rpeak_batch_fn(fmt: str, peak_threshold: float, refr: int):
         return jax.vmap(one_window)(sig)
 
     return _jit_batch_fn(fn)
+
+
+def _rpeak_batch_fn(fmt: str, peak_threshold: float, refr: int):
+    """Compiled-batch-fn cache shared across Pipeline/engine instances —
+    re-creating an engine (benchmark warmups, property tests streaming one
+    record many ways) reuses the jit cache instead of re-tracing.  Keyed on
+    the round-backend/fused selection so an A/B toggle retraces instead of
+    serving a function traced under the other arm."""
+    return _rpeak_batch_fn_cached(fmt, peak_threshold, refr,
+                                  fusion_cache_key())
 
 
 def rpeak_pipeline(window_s: float = RPEAK_WINDOW_S,

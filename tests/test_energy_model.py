@@ -1,5 +1,11 @@
-"""energy/model.py vs the paper's §VI numbers, and the streaming op-count
-extensions layered on top of it."""
+"""energy/model.py vs the paper's §VI numbers, the streaming op-count
+extensions layered on top of it, and the backend-invariance contract: the
+ledger's per-window op counts (adds/muls/roundings) and nJ/window must be
+IDENTICAL under the fused and unfused backends, so fusion can never change
+what a window is billed."""
+import dataclasses
+
+import numpy as np
 import pytest
 
 from repro.energy import model as em
@@ -51,3 +57,45 @@ def test_stream_window_op_counts_sane():
     assert e_rpeak < e_cough / 10
     assert energy_config_for_format("posit10") == "coprosit"
     assert energy_config_for_format("bfloat16") == "fpu_ss"
+
+
+def test_op_counts_roundings_alias_total():
+    ops = em.OpCounts(add=3, mul=2, div=1, sqrt=1, conv=4)
+    assert ops.roundings() == ops.total() == 11
+
+
+def _ledger_rows_for_backend(mode):
+    """Stream two ECG windows through a real engine under one backend and
+    return (ops_per_window, ledger group rows minus wall-clock columns)."""
+    import jax.numpy as jnp  # noqa: F401  (engine pulls in jax)
+
+    from repro.core.arith import backend_overrides
+    from repro.data.biosignals import ECG_FS, ecg_stream_signal
+    from repro.stream import StreamEngine, rpeak_pipeline
+
+    with backend_overrides(fused=mode):
+        pipe = rpeak_pipeline()
+        eng = StreamEngine({"rpeak": pipe}, max_batch=4)
+        sig, _ = ecg_stream_signal(4.0, seed=5)
+        eng.ingest("p0", "rpeak", "ecg", sig[None, :])
+        eng.drain()
+        eng.finalize_all()
+        rows = {}
+        for key, row in eng.fleet_summary().items():
+            rows[key] = {k: v for k, v in row.items()
+                         if k not in ("windows_per_s",)}
+        return dataclasses.asdict(pipe.ops_per_window), rows
+
+
+def test_ledger_op_counts_and_nj_backend_invariant():
+    ops_on, rows_on = _ledger_rows_for_backend("on")
+    ops_off, rows_off = _ledger_rows_for_backend("off")
+    # the billed op counts are the same dataclass, field for field …
+    assert ops_on == ops_off
+    # … so every ledger row (windows, batches, nJ/window, totals) agrees
+    assert rows_on.keys() == rows_off.keys()
+    for key in rows_on:
+        assert rows_on[key].keys() == rows_off[key].keys(), key
+        for col, val in rows_on[key].items():
+            np.testing.assert_allclose(val, rows_off[key][col], rtol=0,
+                                       atol=0, err_msg=f"{key}.{col}")

@@ -1,0 +1,255 @@
+"""Bit-identity of the fused rounded-kernel backend vs the retained oracles.
+
+Property suite over ALL registered formats × {dot, sum, cumsum, matmul,
+fft, rfft} × shapes including length-0, length-1, non-pow2 batch, and
+Inf/NaN-poisoned IEEE inputs: ``REPRO_FUSED_KERNELS=on`` (stacked
+one-launch-per-stage FFT butterflies, unrolled short reductions,
+``Arith.matmul`` routing) must produce the SAME BITS as ``off`` (the
+element-per-step / per-op oracle paths).
+
+Comparator: exact bit equality, except NaN lanes compare by position only —
+XLA canonicalizes NaN sign/payload differently across fusion shapes (e.g.
+an fp8e4m3 overflow NaN came out −NaN from the scan and +NaN from the
+unrolled chain), and IEEE 754 makes NaN sign/payload non-semantic.  The
+honest-poisoning contract is therefore: NaNs in exactly the same places,
+identical bits everywhere else — which is what ``_assert_bits`` pins.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.arith import (Arith, backend_overrides, fusion_cache_key,
+                              get_fused_kernels)
+from repro.core.formats import ALL_FORMATS, POSIT16
+
+FORMATS = sorted(ALL_FORMATS)
+
+
+def fused(mode: str):
+    """Scoped fused-switch override restoring the PRIOR raw mode — an
+    env-selected REPRO_FUSED_KERNELS survives the suite."""
+    return backend_overrides(fused=mode)
+
+
+def _assert_bits(a, b, msg):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    na, nb = np.isnan(a), np.isnan(b)
+    np.testing.assert_array_equal(na, nb, err_msg=f"{msg} (NaN positions)")
+    np.testing.assert_array_equal(a.view(np.uint32)[~na],
+                                  b.view(np.uint32)[~nb], err_msg=msg)
+
+
+def _poison(ar, x):
+    """Scatter Inf/NaN/-Inf into IEEE inputs (posits stay NaR-free, the
+    documented rfft contract)."""
+    if not ar.is_posit and x.size > 3:
+        x.flat[0], x.flat[x.size // 2], x.flat[-1] = np.inf, np.nan, -np.inf
+    return x
+
+
+# ---------------------------------------------------------------------------
+# reductions: dot / sum / cumsum
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_reductions_fused_vs_oracle(fmt):
+    ar = Arith.make(fmt)
+    rng = np.random.default_rng(11)
+    # length-0, length-1, short (unrolled), long (past the unroll
+    # threshold), and a 2-D non-pow2 batch
+    for shape in ((0,), (1,), (7,), (130,), (3, 17)):
+        v = _poison(ar, rng.normal(0, 50, shape).astype(np.float32))
+        w = rng.normal(0, 2, shape).astype(np.float32)
+        vj, wj = jnp.asarray(v), jnp.asarray(w)
+        with fused("on"):
+            got = [ar.dot(vj, wj), ar.sum(vj), ar.cumsum(vj)]
+        with fused("off"):
+            want = [ar.dot(vj, wj), ar.sum(vj), ar.cumsum(vj)]
+        for g, o, name in zip(got, want, ("dot", "sum", "cumsum")):
+            _assert_bits(g, o, f"{fmt} {name} {shape}")
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_matmul_fused_vs_oracle(fmt):
+    ar = Arith.make(fmt)
+    rng = np.random.default_rng(12)
+    shapes = (((3, 5), (5, 4)),      # plain 2-D
+              ((2, 3, 7), (7, 4)),   # batched, non-pow2
+              ((5,), (5, 2)),        # vector row
+              ((3, 1), (1, 2)),      # K = 1
+              ((0, 5), (5, 4)),      # empty batch
+              ((4, 0), (0, 3)))      # K = 0
+    for ash, bsh in shapes:
+        a = _poison(ar, rng.normal(0, 20, ash).astype(np.float32))
+        b = rng.normal(0, 2, bsh).astype(np.float32)
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        with fused("on"):
+            got = ar.matmul(aj, bj)
+        with fused("off"):
+            want = ar.matmul(aj, bj)
+        assert got.shape == (*ash[:-1], bsh[1])
+        _assert_bits(got, want, f"{fmt} matmul {ash}x{bsh}")
+
+
+def test_matmul_ieee_per_mac_matches_per_row_dot():
+    """The IEEE matmul contract: column n of matmul(a, b) is exactly
+    dot(a, b[:, n]) — per-MAC rounding preserved under the batched route."""
+    ar = Arith.make("fp16")
+    rng = np.random.default_rng(13)
+    a = jnp.asarray(rng.normal(0, 200, (6, 33)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 2, (33, 5)).astype(np.float32))
+    got = ar.matmul(a, b)
+    for n_col in range(5):
+        _assert_bits(got[:, n_col], ar.dot(a, b[:, n_col]),
+                     f"fp16 matmul col {n_col} vs dot")
+
+
+def test_matmul_posit_matches_single_rounded_wide_product():
+    """The posit matmul contract: ONE wide product, ONE rounding — the
+    fused arm shares the a @ b graph with the oracle, so the only degree
+    of freedom is the (exhaustively verified) rounding realization."""
+    ar = Arith.make("posit16")
+    rng = np.random.default_rng(14)
+    a = jnp.asarray(rng.normal(0, 20, (6, 33)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 2, (33, 5)).astype(np.float32))
+    _assert_bits(ar.matmul(a, b), ar.rnd(a @ b), "posit16 matmul vs rnd(a@b)")
+
+
+# ---------------------------------------------------------------------------
+# fft / rfft
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("n", [8, 64])
+def test_fft_rfft_fused_vs_oracle(fmt, n):
+    from repro.apps.dsp import fft_format, rfft_format
+    ar = Arith.make(fmt)
+    rng = np.random.default_rng(15)
+    # non-pow2 batches, incl. a zero-size batch and a 2-D batch
+    for batch in ((3,), (0,), (5, 2)):
+        x = _poison(ar, rng.normal(0, 3e3, (*batch, n)).astype(np.float32))
+        y = rng.normal(0, 1, (*batch, n)).astype(np.float32)
+        xj, yj = jnp.asarray(x), jnp.asarray(y)
+        with fused("on"):
+            got = fft_format(ar, xj, yj) + rfft_format(ar, xj)
+        with fused("off"):
+            want = fft_format(ar, xj, yj) + rfft_format(ar, xj)
+        for g, o, name in zip(got, want,
+                              ("fft.re", "fft.im", "rfft.re", "rfft.im")):
+            _assert_bits(g, o, f"{fmt} {name} n={n} batch={batch}")
+
+
+def test_fft_tiny_sizes_fused_vs_oracle():
+    """n = 1/2/4 exercise the no-stage and below-prune fallbacks."""
+    from repro.apps.dsp import fft_format, rfft_format
+    rng = np.random.default_rng(16)
+    for fmt in ("posit16", "fp16"):
+        ar = Arith.make(fmt)
+        for n in (1, 2, 4):
+            x = jnp.asarray(rng.normal(0, 10, (3, n)).astype(np.float32))
+            z = jnp.zeros_like(x)
+            with fused("on"):
+                got = fft_format(ar, x, z) + rfft_format(ar, x)
+            with fused("off"):
+                want = fft_format(ar, x, z) + rfft_format(ar, x)
+            for g, o in zip(got, want):
+                _assert_bits(g, o, f"{fmt} tiny fft n={n}")
+
+
+def test_rfft_pallas_stage_loop_matches_jnp(monkeypatch):
+    """Force the pallas round backend (interpret mode on CPU): the batched
+    posit_butterfly stage loop must reproduce the jnp stacked stages."""
+    from repro.core.arith import set_round_backend
+    from repro.apps.dsp import rfft_format
+    ar = Arith.make("posit16")
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(0, 3e3, (2, 64)).astype(np.float32))
+    want = rfft_format(ar, x)
+    set_round_backend("pallas")
+    try:
+        got = rfft_format(ar, x)
+    finally:
+        set_round_backend("auto")
+    for g, o, name in zip(got, want, ("re", "im")):
+        _assert_bits(g, o, f"pallas stage loop rfft {name}")
+
+
+# ---------------------------------------------------------------------------
+# pallas rounded-matmul kernel (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+def test_pallas_rounded_matmul_fusion_identity():
+    """The kernel's fused rounding must equal rounding its own wide
+    product (do_round=False escape) — that is the piece the kernel adds;
+    the wide accumulation order itself is a device detail (see
+    kernels/README.md), pinned here only to a tolerance vs the jnp dot."""
+    from repro.core.posit import round_to_posit
+    from repro.kernels.posit_matmul import rounded_matmul
+    rng = np.random.default_rng(18)
+    a = jnp.asarray(rng.normal(0, 5, (9, 33)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 5, (33, 7)).astype(np.float32))
+    wide = rounded_matmul(a, b, POSIT16, do_round=False, interpret=True)
+    got = rounded_matmul(a, b, POSIT16, interpret=True)
+    _assert_bits(got, round_to_posit(wide, POSIT16), "kernel fused rounding")
+    np.testing.assert_allclose(np.asarray(wide), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_pallas_rounded_matmul_nonmultiple_block_shapes():
+    """M/N above one block but not multiples of it must pad to whole
+    blocks (regression: M=264 used to trip the kernel's grid assert)."""
+    from repro.core.posit import round_to_posit
+    from repro.kernels.posit_matmul import rounded_matmul
+    rng = np.random.default_rng(20)
+    for (M, K, N) in ((264, 16, 8), (9, 300, 300), (513, 5, 257)):
+        a = jnp.asarray(rng.normal(0, 5, (M, K)).astype(np.float32))
+        b = jnp.asarray(rng.normal(0, 5, (K, N)).astype(np.float32))
+        wide = rounded_matmul(a, b, POSIT16, do_round=False, interpret=True)
+        got = rounded_matmul(a, b, POSIT16, interpret=True)
+        assert got.shape == (M, N)
+        _assert_bits(got, round_to_posit(wide, POSIT16),
+                     f"kernel fused rounding {M}x{K}x{N}")
+
+
+def test_pallas_batched_butterfly_broadcasts_twiddles():
+    """The arbitrary-shape butterfly wrapper: whole-plane shapes with
+    twiddles broadcast along the run axis, vs the Arith op sequence."""
+    from repro.kernels.posit_round import posit_butterfly
+    ar = Arith.make("posit16")
+    rng = np.random.default_rng(19)
+    mk = lambda s: jnp.asarray(rng.normal(0, 100, s).astype(np.float32))
+    e_re, e_im, o_re, o_im = (mk((3, 4, 33)) for _ in range(4))
+    w_re, w_im = mk((4, 1)), mk((4, 1))     # per-row twiddles, broadcast
+    u_re, u_im, v_re, v_im = posit_butterfly(
+        e_re, e_im, o_re, o_im, w_re, w_im, POSIT16, interpret=True)
+    t_re = ar.sub(ar.mul(w_re, o_re), ar.mul(w_im, o_im))
+    t_im = ar.add(ar.mul(w_re, o_im), ar.mul(w_im, o_re))
+    _assert_bits(u_re, ar.add(e_re, t_re), "butterfly u_re")
+    _assert_bits(u_im, ar.add(e_im, t_im), "butterfly u_im")
+    _assert_bits(v_re, ar.sub(e_re, t_re), "butterfly v_re")
+    _assert_bits(v_im, ar.sub(e_im, t_im), "butterfly v_im")
+
+
+# ---------------------------------------------------------------------------
+# backend toggling invalidates compiled-fn caches
+# ---------------------------------------------------------------------------
+def test_fusion_cache_key_tracks_toggles():
+    base = fusion_cache_key()
+    with fused("off"):
+        assert fusion_cache_key() != base
+        assert not get_fused_kernels()
+    assert fusion_cache_key() == base
+
+
+def test_rpeak_batch_fn_cache_keyed_on_backend():
+    from repro.stream.pipelines import _rpeak_batch_fn
+    with fused("on"):
+        fn_on = _rpeak_batch_fn("posit16", 0.5, 13)
+    with fused("off"):
+        fn_off = _rpeak_batch_fn("posit16", 0.5, 13)
+        assert fn_on is not _rpeak_batch_fn("posit16", 0.5, 13)
+    assert fn_off is not fn_on
+    with fused("on"):
+        assert _rpeak_batch_fn("posit16", 0.5, 13) is fn_on

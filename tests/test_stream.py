@@ -309,6 +309,19 @@ def test_stream_bench_json_schema_matches_committed(forest, tmp_path):
                 else set(next(v for k, v in committed["groups"].items()
                               if k != "fleet")))
         assert set(row) == want, name
+    # the committed record carries the paired A/B evidence and the CI
+    # perf-gate baseline; ad-hoc runs emit the keys as None placeholders
+    assert doc["ab"] is None and doc["smoke_baseline"] is None
+    ab = committed["ab"]
+    assert set(ab) >= {"arms", "repeat", "ratio"}
+    assert {"fused", "unfused"} <= set(ab["arms"])
+    for arm in ab["arms"].values():
+        assert set(arm) == {"groups", "wall_s"}
+        assert set(arm["groups"]) == set(committed["groups"])
+    sb = committed["smoke_baseline"]
+    assert set(sb) == {"config", "fleet"}
+    assert set(sb["config"]) == set(committed["config"])
+    assert "us_per_window" in sb["fleet"]
 
 
 def test_engine_per_patient_format_override(forest):
