@@ -3,16 +3,20 @@ baseline.
 
   python benchmarks/check_perf.py --baseline BENCH_stream.json \
       --current smoke_perf.json [--max-regress 0.25]
+  python benchmarks/check_perf.py --benchmark serve \
+      --baseline BENCH_serve.json --current serve_smoke.json
 
-``--baseline`` is the committed ``BENCH_stream.json`` whose
-``smoke_baseline`` block was recorded with ``stream_bench
---smoke-baseline`` on the reference container; ``--current`` is a fresh
-``stream_bench --smoke --json`` run.  The gate compares like-for-like
-(both smoke-sized, warmup-free, identical fleet mix and backend config —
-mismatches are an error, not a pass) and fails when
-``fleet.us_per_window`` regresses more than ``--max-regress`` (default
-25%).  Improvements always pass; a note is printed either way so the CI
-log shows the trajectory.
+``--baseline`` is the committed benchmark record whose ``smoke_baseline``
+block was recorded with the bench's ``--smoke-baseline`` flag on the
+reference container; ``--current`` is a fresh ``--smoke --json`` run of
+the same bench.  ``--benchmark`` picks the record family: ``stream``
+gates ``fleet.us_per_window`` (BENCH_stream.json), ``serve`` gates
+``fleet.us_per_token`` (BENCH_serve.json).  The gate compares
+like-for-like (both smoke-sized, warmup-free, identical workload and
+backend config — mismatches are an error, not a pass) and fails when the
+gated metric regresses more than ``--max-regress`` (default 25%).
+Improvements always pass; a note is printed either way so the CI log
+shows the trajectory.
 
 Scope caveat: smoke runs skip the warmup pass, so the gated number is
 dominated by jit compile time (hundreds of ms/window vs ~0.3 warm).  The
@@ -28,21 +32,38 @@ import argparse
 import json
 import sys
 
-# config keys that must match for the µs/window comparison to mean anything
-COMPARABLE = ("patients", "windows", "max_batch", "smoke", "homogeneous",
-              "escalate", "transport", "backend", "seed", "round_backend",
-              "fused_kernels")
+# per-benchmark: config keys that must match for the comparison to mean
+# anything, and the gated fleet metric
+BENCHMARKS = {
+    "stream": {
+        "comparable": ("patients", "windows", "max_batch", "smoke",
+                       "homogeneous", "escalate", "transport", "backend",
+                       "seed", "round_backend", "fused_kernels"),
+        "metric": "us_per_window",
+    },
+    "serve": {
+        "comparable": ("requests", "max_new_tokens", "batch_size",
+                       "max_prompt", "smoke", "kv", "weights", "model",
+                       "backend", "seed", "round_backend",
+                       "fused_kernels"),
+        "metric": "us_per_token",
+    },
+}
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True,
-                    help="committed BENCH_stream.json (with smoke_baseline)")
+                    help="committed benchmark record (with smoke_baseline)")
     ap.add_argument("--current", required=True,
-                    help="fresh stream_bench --smoke --json output")
+                    help="fresh <bench> --smoke --json output")
+    ap.add_argument("--benchmark", choices=sorted(BENCHMARKS),
+                    default="stream",
+                    help="record family / gated metric (default stream)")
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="allowed fractional slowdown (default 0.25)")
     args = ap.parse_args()
+    spec = BENCHMARKS[args.benchmark]
 
     with open(args.baseline) as f:
         base_doc = json.load(f)
@@ -51,18 +72,26 @@ def main():
     base = base_doc.get("smoke_baseline")
     if not base:
         sys.exit(f"{args.baseline} has no smoke_baseline block — "
-                 f"regenerate it with stream_bench --json --smoke-baseline")
-    mismatched = [k for k in COMPARABLE
+                 f"regenerate it with {args.benchmark}_bench --json "
+                 f"--smoke-baseline")
+    for doc, which in ((base_doc, "baseline"), (cur, "current")):
+        want = f"{args.benchmark}_bench"
+        if doc.get("benchmark") != want:
+            sys.exit(f"{which} record is "
+                     f"{doc.get('benchmark')!r}, expected {want!r} "
+                     f"(wrong --benchmark?)")
+    mismatched = [k for k in spec["comparable"]
                   if base["config"].get(k) != cur["config"].get(k)]
     if mismatched:
         sys.exit(f"baseline/current configs are not comparable on "
                  f"{mismatched}: {[(k, base['config'].get(k), cur['config'].get(k)) for k in mismatched]}")
 
-    b_us = base["fleet"]["us_per_window"]
-    c_us = cur["groups"]["fleet"]["us_per_window"]
+    metric = spec["metric"]
+    b_us = base["fleet"][metric]
+    c_us = cur["groups"]["fleet"][metric]
     change = c_us / b_us - 1.0
     verdict = "REGRESSION" if change > args.max_regress else "ok"
-    print(f"perf-smoke fleet us/window: baseline {b_us:.0f} → current "
+    print(f"perf-smoke fleet {metric}: baseline {b_us:.0f} → current "
           f"{c_us:.0f} ({change:+.1%}, gate +{args.max_regress:.0%}) "
           f"[{verdict}]")
     if change > args.max_regress:

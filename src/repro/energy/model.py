@@ -171,6 +171,46 @@ def estimate_app_energy_nj(ops: OpCounts, config: str = "coprosit",
     return cycles * CLOCK_NS * 1e-9 * power_uw * 1e-6 * 1e9
 
 
+# ---------------------------------------------------------------------------
+# Token serving: per-token energy = datapath ops + KV-cache memory traffic
+# ---------------------------------------------------------------------------
+
+# The Mem Stream FIFO moves one 16-bit operand per cycle at the measured
+# POWER_MEM corner (Table IV's memory column) — the paper's streaming
+# load/store engine.  Cache traffic is billed at that rate, so halving the
+# storage width (posit8 vs bf16) halves the cycles AND the energy of the
+# decode step's dominant roofline term.
+MEM_STREAM_BYTES_PER_CYCLE = 2.0
+
+
+def mem_stream_energy_nj(n_bytes: float) -> float:
+    """Energy to stream ``n_bytes`` through the Mem Stream FIFO corner."""
+    cycles = n_bytes / MEM_STREAM_BYTES_PER_CYCLE
+    return cycles * CLOCK_NS * 1e-9 * POWER_MEM * 1e-6 * 1e9  # → nJ
+
+
+@dataclasses.dataclass
+class TokenOpCounts:
+    """One LM token's work: datapath ops plus KV-cache HBM traffic.
+
+    ``compute`` follows the same semantic-op contract as ``OpCounts`` (so
+    nJ/token is invariant under the fused/oracle backend toggles);
+    ``kv_read_bytes``/``kv_write_bytes`` are the cache traffic at the
+    STORAGE width — a posit8 cache moves half the bytes of a bf16 one for
+    the same context, which is the serving side of the paper's
+    narrow-storage energy argument.
+    """
+
+    compute: OpCounts
+    kv_read_bytes: float = 0.0
+    kv_write_bytes: float = 0.0
+
+    def energy_nj(self, config: str = "coprosit", fmt: str = None) -> float:
+        return (estimate_app_energy_nj(self.compute, config, fmt=fmt)
+                + mem_stream_energy_nj(self.kv_read_bytes
+                                       + self.kv_write_bytes))
+
+
 def fft_op_counts(n: int) -> OpCounts:
     """Radix-2 DIT complex FFT: N/2·log2N butterflies × (cmul + 2 cadd)."""
     import math

@@ -69,12 +69,21 @@ def butterfly(e_re, e_im, o_re, o_im, w_re, w_im, fmt: PositFormat):
 
 def kv_attention(q: jax.Array, k_bits: jax.Array, v_bits: jax.Array,
                  length, fmt: PositFormat, bs: int = 512):
-    """Batched wrapper: q (B, KV, G, D); k/v bits (B, S, KV, D)."""
-    length = jnp.asarray(length)
+    """Batched wrapper: q (B, KV, G, D); k/v bits (B, S, KV, D).
 
-    def per_head(qh, kh, vh):
-        return posit_kv_attention(qh, kh, vh, length, fmt, bs=bs,
-                                  interpret=_interpret())
+    ``length`` is a scalar shared by every row or a (B,) vector of per-row
+    valid lengths — the serving engine's continuous-batching slots each
+    carry their own context length.
+    """
+    B = q.shape[0]
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
 
-    per_batch = jax.vmap(per_head, in_axes=(0, 1, 1))       # over KV heads
-    return jax.vmap(per_batch, in_axes=(0, 0, 0))(q, k_bits, v_bits)
+    def per_item(qb, kb, vb, lb):
+        def per_head(qh, kh, vh):
+            return posit_kv_attention(qh, kh, vh, lb, fmt, bs=bs,
+                                      interpret=_interpret())
+
+        return jax.vmap(per_head, in_axes=(0, 1, 1))(qb, kb, vb)
+
+    return jax.vmap(per_item, in_axes=(0, 0, 0, 0))(q, k_bits, v_bits,
+                                                    length)

@@ -24,6 +24,17 @@ from .common import decode_tile
 NEG_INF = -1e30
 
 
+def _block_plan(S: int, bs: int):
+    """(bs, S_pad): block size clamped to the padded sequence and rounded to
+    the f32 sublane multiple (8), and S padded up to a whole number of
+    blocks.  ``ref.kv_attention_oracle`` mirrors this plan exactly — the
+    bitwise fused≡oracle contract depends on both sides seeing the same
+    blocks in the same order."""
+    rounded = -(-max(S, 1) // 8) * 8
+    bs = max(8, min(bs, rounded))
+    return bs, -(-S // bs) * bs
+
+
 def _kv_attn_kernel(q_ref, kbits_ref, vbits_ref, len_ref, out_ref,
                     m_ref, l_ref, acc_ref, *, fmt: PositFormat, bs: int):
     i = pl.program_id(0)
@@ -73,14 +84,22 @@ def posit_kv_attention(q: jax.Array, k_bits: jax.Array, v_bits: jax.Array,
     """q: (G, D); k_bits/v_bits: (S, D) posit patterns; length: valid S.
 
     Returns (G, D) f32 attention output for one kv head. Batch/head axes are
-    mapped with vmap in ops.py.
+    mapped with vmap in ops.py.  S needs no relation to ``bs``: the sequence
+    is padded internally to a whole number of blocks (zero bit-patterns,
+    masked out by the ``pos < length`` guard).  S == 0 — and, via that same
+    mask, length == 0 — return all-zeros rather than launching a kernel.
     """
     G, D = q.shape
     S, D2 = k_bits.shape
     assert D == D2
-    bs = min(bs, S)
-    assert S % bs == 0
-    grid = (S // bs,)
+    q = q.astype(jnp.float32)
+    if S == 0:
+        return jnp.zeros((G, D), jnp.float32)
+    bs, S_pad = _block_plan(S, bs)
+    if S_pad != S:
+        k_bits = jnp.pad(k_bits, ((0, S_pad - S), (0, 0)))
+        v_bits = jnp.pad(v_bits, ((0, S_pad - S), (0, 0)))
+    grid = (S_pad // bs,)
     return pl.pallas_call(
         functools.partial(_kv_attn_kernel, fmt=fmt, bs=bs),
         grid=grid,
@@ -98,4 +117,5 @@ def posit_kv_attention(q: jax.Array, k_bits: jax.Array, v_bits: jax.Array,
             pltpu.VMEM((G, D), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k_bits, v_bits, length.reshape(1).astype(jnp.int32))
+    )(q, k_bits, v_bits,
+      jnp.minimum(length.reshape(1).astype(jnp.int32), S))

@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -25,12 +27,76 @@ def matmul_ref(a_bits, b_bits, fmt: PositFormat, compute_dtype=jnp.bfloat16):
 
 
 def kv_attention_ref(q, k_bits, v_bits, length, fmt: PositFormat):
-    """q: (G, D); k/v bits: (S, D). Masked softmax attention, f32."""
+    """q: (G, D); k/v bits: (S, D). Masked softmax attention, f32.
+
+    Naive decode-then-softmax reference (one wide softmax, no blocking) —
+    the float-tolerance oracle.  A zero ``length`` (or S == 0) returns
+    zeros, matching the kernel's empty-sequence guard, instead of the
+    uniform weights an unmasked softmax would produce.
+    """
+    G, D = q.shape
+    S = k_bits.shape[0]
+    if S == 0:
+        return jnp.zeros((G, D), jnp.float32)
     k = decode_ref(k_bits, fmt)
     v = decode_ref(v_bits, fmt)
-    D = q.shape[-1]
     logits = (q.astype(jnp.float32) @ k.T) * (D ** -0.5)   # (G, S)
-    mask = jnp.arange(k.shape[0]) < length
+    mask = jnp.arange(S) < length
     logits = jnp.where(mask[None, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(mask[None, :], w, 0.0)   # length == 0 → all-zero weights
     return w @ v
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "bs"))
+def kv_attention_oracle(q, k_bits, v_bits, length, fmt: PositFormat,
+                        bs: int = 512):
+    """Block-mirrored oracle for ``posit_kv_attention`` — BITWISE identical.
+
+    Wide reductions are implementation-defined (kernels/README.md rule 2),
+    so bit-identity with the fused kernel requires sharing its exact wide
+    graph: this oracle replays the kernel's block plan, its in-kernel
+    ``decode_tile`` codec, and the online-softmax recurrence op-for-op
+    (same dot_general shapes, same masking order, same carry updates).
+    It is jitted for the same reason — both realizations must be compiled
+    by XLA so the residual fusion freedom (e.g. mul+add → FMA in the carry
+    update) is exercised identically; the eager op-at-a-time evaluation
+    rounds each step separately and drifts by 1 ulp per block.
+    ``kv_attention_ref`` above stays the independent float-tolerance check.
+    """
+    from .common import decode_tile
+    from .posit_kv_attention import NEG_INF, _block_plan
+
+    G, D = q.shape
+    S = k_bits.shape[0]
+    q = q.astype(jnp.float32)
+    if S == 0:
+        return jnp.zeros((G, D), jnp.float32)
+    bs, S_pad = _block_plan(S, bs)
+    if S_pad != S:
+        k_bits = jnp.pad(k_bits, ((0, S_pad - S), (0, 0)))
+        v_bits = jnp.pad(v_bits, ((0, S_pad - S), (0, 0)))
+    length = jnp.minimum(jnp.asarray(length, jnp.int32), S)
+
+    m = jnp.full((G, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((G, 1), jnp.float32)
+    acc = jnp.zeros((G, D), jnp.float32)
+    for i in range(S_pad // bs):
+        k = decode_tile(k_bits[i * bs:(i + 1) * bs], fmt, jnp.float32)
+        v = decode_tile(v_bits[i * bs:(i + 1) * bs], fmt, jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * (D ** -0.5)
+        pos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        valid = pos < length
+        logits = jnp.where(valid, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m = m_new
+    return acc / jnp.maximum(l, 1e-30)

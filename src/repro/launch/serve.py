@@ -1,5 +1,5 @@
-"""Serving driver: load (or init) a model, posit-quantize weights + KV per
-policy, run batched generation."""
+"""Serving driver: load (or init) a model, open a precision lane per
+ServePolicy, run continuous-batching generation, print the token ledger."""
 from __future__ import annotations
 
 import argparse
@@ -8,39 +8,55 @@ import jax
 import numpy as np
 
 from repro.configs import CONFIGS, reduced
-from repro.core.policy import QuantPolicy
 from repro.launch.mesh import make_debug_mesh_info
 from repro.models import build_model
-from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve import ServeConfig, ServePolicy, ServingEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b", choices=sorted(CONFIGS))
-    ap.add_argument("--weights-format", default="posit16")
-    ap.add_argument("--kv-format", default="posit8")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--weights-format", default="posit16",
+                    help="posit weight storage ('none' → native)")
+    ap.add_argument("--kv-format", default="posit8",
+                    help="posit KV-cache storage ('none' → bf16)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="slots per precision lane")
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--max-prompt", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    def fmt(name):
+        return None if name in ("none", "") else name
+
     cfg = reduced(CONFIGS[args.arch])
-    policy = QuantPolicy(weights=args.weights_format,
-                         kv_cache=args.kv_format)
+    policy = ServePolicy(weights=fmt(args.weights_format),
+                         kv=fmt(args.kv_format))
     minfo = make_debug_mesh_info()
     with minfo.mesh:
-        model = build_model(cfg, minfo, policy)
+        model = build_model(cfg, minfo)
         params = model.init(jax.random.key(0))
         eng = ServingEngine(model, params,
                             ServeConfig(batch_size=args.batch,
-                                        max_new_tokens=args.new_tokens),
+                                        max_prompt=args.max_prompt,
+                                        max_new_tokens=args.new_tokens,
+                                        temperature=args.temperature,
+                                        seed=args.seed),
                             policy)
-        rng = np.random.default_rng(0)
-        prompts = [rng.integers(0, cfg.vocab, size=rng.integers(4, 16))
-                   .astype(np.int32) for _ in range(args.batch)]
-        outs = eng.generate(prompts)
-        for i, o in enumerate(outs):
-            print(f"[serve] seq{i}: prompt_len={len(prompts[i])} "
-                  f"generated={o.tolist()}")
+        rng = np.random.default_rng(args.seed)
+        for _ in range(args.requests):
+            eng.submit(rng.integers(0, cfg.vocab, size=rng.integers(4, 16))
+                       .astype(np.int32))
+        for c in sorted(eng.run(), key=lambda c: c.rid):
+            print(f"[serve] rid={c.rid}: prompt_len={c.prompt_len} "
+                  f"finish={c.finish_reason} generated={c.tokens.tolist()}")
+        for lane, row in eng.ledger.summary().items():
+            print(f"[ledger] {lane}: requests={row['requests']:.0f} "
+                  f"us_per_token={row['us_per_token']:.0f} "
+                  f"nj_per_token={row['nj_per_token']:.1f}")
 
 
 if __name__ == "__main__":

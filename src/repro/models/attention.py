@@ -31,11 +31,17 @@ NEG_INF = -1e30
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class KVCache:
-    """Fixed-capacity KV cache; storage either bf16 arrays or posit bits."""
+    """Fixed-capacity KV cache; storage either bf16 arrays or posit bits.
+
+    ``length`` is a scalar int32 (every row advances together — the classic
+    static-batch decode) or a (B,) vector of per-row valid lengths (the
+    serving engine's continuous-batching slots, where each slot holds a
+    different request at a different context depth).
+    """
 
     k: object  # jax.Array (B,S,KV,D) bf16  |  PositTensor bits
     v: object
-    length: jax.Array  # scalar int32: number of valid positions
+    length: jax.Array  # int32 scalar | (B,): number of valid positions
 
     def tree_flatten(self):
         return (self.k, self.v, self.length), None
@@ -49,18 +55,23 @@ class KVCache:
         k = self.k.bits if isinstance(self.k, PositTensor) else self.k
         return k.shape[1]
 
+    @property
+    def per_row(self) -> bool:
+        return self.length.ndim == 1
+
     # -- storage ---------------------------------------------------------
     @staticmethod
     def create(batch: int, capacity: int, kv_heads: int, head_dim: int,
-               fmt: Optional[PositFormat] = None):
+               fmt: Optional[PositFormat] = None, per_row: bool = False):
         shape = (batch, capacity, kv_heads, head_dim)
+        length = jnp.zeros((batch,) if per_row else (), jnp.int32)
         if fmt is None:
             z = jnp.zeros(shape, jnp.bfloat16)
-            return KVCache(z, z, jnp.zeros((), jnp.int32))
+            return KVCache(z, z, length)
         bits = jnp.zeros(shape, fmt.storage_dtype)
         return KVCache(
             PositTensor(bits, fmt, None), PositTensor(bits, fmt, None),
-            jnp.zeros((), jnp.int32),
+            length,
         )
 
     def read(self, dtype=jnp.bfloat16):
@@ -71,41 +82,67 @@ class KVCache:
 
         return rd(self.k), rd(self.v)
 
-    def append(self, k_new: jax.Array, v_new: jax.Array) -> "KVCache":
-        """Write S_new positions at ``length`` (dynamic)."""
-        idx = self.length
+    def _encode(self, store, new):
+        if isinstance(store, PositTensor):
+            scaled = new.astype(jnp.float32)
+            if store.scale is not None:
+                scaled = scaled / store.scale
+            return posit_encode(scaled, store.fmt)
+        return new.astype(store.dtype)
+
+    @staticmethod
+    def _raw(store):
+        return store.bits if isinstance(store, PositTensor) else store
+
+    def _wrap(self, store, raw):
+        if isinstance(store, PositTensor):
+            return PositTensor(raw, store.fmt, store.scale)
+        return raw
+
+    def append(self, k_new: jax.Array, v_new: jax.Array,
+               new_length: Optional[jax.Array] = None) -> "KVCache":
+        """Write S_new positions into the cache.
+
+        Scalar-length caches write at ``length`` (every row in lockstep).
+        Per-row caches write one position per row at each row's own
+        ``length`` when S_new == 1 (continuous-batching decode), or a fresh
+        block at position 0 when S_new > 1 (right-padded prefill:
+        ``new_length`` then carries the true per-row prompt lengths; the
+        pad tail beyond them is dead weight that the length mask hides and
+        later decode steps overwrite).
+        """
+        S_new = k_new.shape[1]
 
         def wr(store, new):
-            if isinstance(store, PositTensor):
-                scaled = new.astype(jnp.float32)
-                if store.scale is not None:
-                    scaled = scaled / store.scale
-                bits_new = posit_encode(scaled, store.fmt)
-                bits = jax.lax.dynamic_update_slice(
-                    store.bits, bits_new, (0, idx, 0, 0))
-                return PositTensor(bits, store.fmt, store.scale)
-            return jax.lax.dynamic_update_slice(
-                store, new.astype(store.dtype), (0, idx, 0, 0))
+            enc = self._encode(store, new)
+            raw = self._raw(store)
+            if self.per_row and S_new == 1:
+                rows = jnp.arange(raw.shape[0])
+                out = raw.at[rows, self.length].set(enc[:, 0])
+            else:
+                idx = jnp.zeros((), jnp.int32) if self.per_row \
+                    else self.length
+                out = jax.lax.dynamic_update_slice(raw, enc, (0, idx, 0, 0))
+            return self._wrap(store, out)
 
-        return KVCache(wr(self.k, k_new), wr(self.v, v_new),
-                       self.length + k_new.shape[1])
+        if new_length is None:
+            new_length = self.length + S_new
+        else:
+            new_length = jnp.asarray(new_length, jnp.int32)
+        return KVCache(wr(self.k, k_new), wr(self.v, v_new), new_length)
 
 
 # ---------------------------------------------------------------------------
 # Core attention math
 # ---------------------------------------------------------------------------
 
-def _mask(qpos, kpos, *, causal: bool, window, kv_len=None):
-    m = (qpos[:, None] - kpos[None, :]) < window
-    if causal:
-        m &= kpos[None, :] <= qpos[:, None]
-    if kv_len is not None:
-        m &= (kpos < kv_len)[None, :]
-    return m
-
-
 def plain_attention(q, k, v, *, causal, window, cap, q_offset=0, kv_len=None):
-    """Reference/materialized path (short sequences, decode)."""
+    """Reference/materialized path (short sequences, decode).
+
+    ``q_offset`` and ``kv_len`` accept scalars (shared by every row) or
+    (B,) vectors — per-row offsets/lengths are how ragged right-padded
+    prompts and continuous-batching decode slots mask their own context.
+    """
     B, Sq, H, D = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -114,10 +151,16 @@ def plain_attention(q, k, v, *, causal, window, cap, q_offset=0, kv_len=None):
                         preferred_element_type=jnp.float32)
     logits = logits * (D ** -0.5)
     logits = softcap(logits, cap)
-    qpos = q_offset + jnp.arange(Sq)
+    # (1|B, Sq) query positions vs (S,) key positions
+    qpos = jnp.reshape(jnp.asarray(q_offset), (-1, 1)) + jnp.arange(Sq)
     kpos = jnp.arange(k.shape[1])
-    m = _mask(qpos, kpos, causal=causal, window=window, kv_len=kv_len)
-    logits = jnp.where(m[None, None, None], logits, NEG_INF)
+    m = (qpos[:, :, None] - kpos[None, None, :]) < window
+    if causal:
+        m &= kpos[None, None, :] <= qpos[:, :, None]
+    if kv_len is not None:
+        m &= kpos[None, None, :] < jnp.reshape(jnp.asarray(kv_len),
+                                               (-1, 1, 1))
+    logits = jnp.where(m[:, None, None], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -237,34 +280,79 @@ def attention_train(p, x, cfg, *, window=BIG_WINDOW, causal=True):
 
 
 def attention_prefill(p, x, cfg, cache: KVCache, *, window=BIG_WINDOW,
-                      causal=True):
+                      causal=True, lengths=None):
     """Full-sequence attention + cache fill. Attention uses the fresh bf16
     k/v (standard practice); the cache stores the quantized copy that decode
-    will read."""
+    will read.
+
+    ``lengths`` (B,) marks right-padded prompts: key positions at or past a
+    row's length are masked out of the prefill attention, and the cache
+    records the true per-row lengths instead of the padded S.
+    """
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     q, k, v = _project_qkv(p, x, cfg, positions)
-    cache = cache.append(k, v)
-    if S > 1024:
+    cache = cache.append(k, v, new_length=lengths)
+    if S > 1024 and lengths is None:
         out = chunked_attention(q, k, v, causal=causal, window=window,
                                 cap=cfg.attn_softcap)
     else:
         out = plain_attention(q, k, v, causal=causal, window=window,
-                              cap=cfg.attn_softcap)
+                              cap=cfg.attn_softcap, kv_len=lengths)
     return dense(p["wo"], out.reshape(B, S, -1)), cache
 
 
+def _fused_kv_eligible(cfg, cache: KVCache, S_new: int) -> bool:
+    """Route decode attention through the Pallas posit-KV kernel?
+
+    Static conditions only (they bake into the trace): posit bit storage
+    without an RMS scale, one query position, no logit softcap, and no
+    local-window layers (``cfg.local_window`` is the static source — the
+    per-layer window value itself is a scanned tracer).  The backend
+    selection mirrors ``Arith.matmul``'s routing: the fused kernel runs
+    when ``REPRO_ROUND_BACKEND`` resolves to pallas AND fused kernels are
+    on; every other combination keeps the jnp decode-then-attend oracle.
+    """
+    from repro.core.arith import get_fused_kernels, get_round_backend
+
+    return (isinstance(cache.k, PositTensor)
+            and isinstance(cache.v, PositTensor)
+            and cache.k.scale is None and cache.v.scale is None
+            and S_new == 1
+            and cfg.attn_softcap == 0.0
+            and cfg.local_window == 0
+            and get_round_backend() == "pallas"
+            and get_fused_kernels())
+
+
 def attention_decode(p, x, cfg, cache: KVCache, *, window=BIG_WINDOW):
-    """Single-token decode against a (possibly posit-quantized) cache."""
+    """Single-token decode against a (possibly posit-quantized) cache.
+
+    Per-row caches mask and position each row by its own length.  Posit
+    caches additionally route through ``kernels.posit_kv_attention`` (the
+    fused online-softmax kernel that decodes K/V bits in VMEM) when the
+    PR-5 backend machinery selects the pallas realization — the jnp
+    decode-then-attend path below is its oracle, property-tested bitwise
+    against the kernel in tests/test_kernels.py / tests/test_serve.py.
+    """
     B, S_new, _ = x.shape
-    positions = cache.length + jnp.arange(S_new)[None, :]
+    positions = jnp.reshape(cache.length, (-1, 1)) + jnp.arange(S_new)
     positions = jnp.broadcast_to(positions, (B, S_new))
     q, k_new, v_new = _project_qkv(p, x, cfg, positions)
     cache = cache.append(k_new, v_new)
-    k, v = cache.read(dtype=x.dtype)
-    out = plain_attention(
-        q, k, v, causal=True, window=window, cap=cfg.attn_softcap,
-        q_offset=cache.length - S_new, kv_len=cache.length)
+    if _fused_kv_eligible(cfg, cache, S_new):
+        from repro.kernels import ops as kernel_ops
+        KV, hd = k_new.shape[2], k_new.shape[3]
+        G = q.shape[2] // KV
+        out = kernel_ops.kv_attention(
+            q[:, 0].reshape(B, KV, G, hd).astype(jnp.float32),
+            cache.k.bits, cache.v.bits, cache.length, cache.k.fmt)
+        out = out.reshape(B, 1, KV * G, hd).astype(x.dtype)
+    else:
+        k, v = cache.read(dtype=x.dtype)
+        out = plain_attention(
+            q, k, v, causal=True, window=window, cap=cfg.attn_softcap,
+            q_offset=cache.length - S_new, kv_len=cache.length)
     return dense(p["wo"], out.reshape(B, S_new, -1)), cache
 
 

@@ -90,7 +90,7 @@ class DecoderLM:
             h, aux = ffn(lp["ffn"], h, cfg), jnp.zeros((), jnp.float32)
         if "ln2_post" in lp:
             h = rms_norm(h, lp["ln2_post"])
-        return x + h, aux
+        return self._act_quant(x + h), aux
 
     def _block_decode(self, lp, x, window, cache):
         cfg = self.cfg
@@ -107,7 +107,18 @@ class DecoderLM:
             h = ffn(lp["ffn"], h, cfg)
         if "ln2_post" in lp:
             h = rms_norm(h, lp["ln2_post"])
-        return x + h, cache
+        return self._act_quant(x + h), cache
+
+    def _act_quant(self, x):
+        """Block-boundary activation rounding (QuantPolicy.activations):
+        the residual stream is snapped onto the posit lattice between
+        blocks, modeling narrow activation storage on the wearable/serving
+        side while compute stays in the wide dtype."""
+        if self.policy.activations is None:
+            return x
+        from repro.core.quant import fake_quant
+        return fake_quant(x.astype(jnp.float32),
+                          self.policy.activations).astype(x.dtype)
 
     # -- forward ----------------------------------------------------------
     def _backbone(self, params, x):
@@ -150,34 +161,48 @@ class DecoderLM:
         return total, {"ce": ce, "aux": aux}
 
     # -- serving ----------------------------------------------------------
-    def init_cache(self, batch: int, capacity: int):
+    def init_cache(self, batch: int, capacity: int, per_row: bool = False):
         cfg = self.cfg
         fmt = self.policy.fmt("kv_cache")
 
         def one(_):
             return attn.KVCache.create(batch, capacity, cfg.n_kv_heads,
-                                       cfg.resolved_head_dim, fmt=fmt)
+                                       cfg.resolved_head_dim, fmt=fmt,
+                                       per_row=per_row)
 
         return stacked(cfg.n_layers, one)
 
     def prefill(self, params, batch, capacity: Optional[int] = None):
-        """Encode a prompt, fill the cache, return last-position logits."""
+        """Encode a prompt, fill the cache, return last-position logits.
+
+        ``batch["lengths"]`` (B,) marks right-padded ragged prompts: pad
+        positions are masked out of every prefill attention, the caches
+        carry per-row lengths (continuous-batching layout), and the
+        returned logits are each row's LAST REAL token's — so padded-batch
+        prefill logits match per-prompt unbatched prefill.
+        """
         cfg = self.cfg
         tokens = batch["tokens"]
+        lengths = batch.get("lengths")
         B, S = tokens.shape
         capacity = capacity or S
         if cfg.frontend == "vision_stub":
+            if lengths is not None:
+                raise NotImplementedError(
+                    "ragged prompts + vision frontend: patch rows would "
+                    "shift every row's real-token offsets")
             capacity += cfg.frontend_len  # patches occupy cache positions
         x = self._inputs_embed(params, batch)
         windows = self._windows()
-        caches = self.init_cache(B, capacity)
+        caches = self.init_cache(B, capacity, per_row=lengths is not None)
 
         def body(x, inp):
             lp, window, cache = inp
             # prefill == train attention + cache write of projected k/v
             h = rms_norm(x, lp["ln1"])
             h2, cache = attn.attention_prefill(lp["attn"], h, cfg, cache,
-                                               window=window)
+                                               window=window,
+                                               lengths=lengths)
             if "ln1_post" in lp:
                 h2 = rms_norm(h2, lp["ln1_post"])
             x = x + h2
@@ -188,12 +213,17 @@ class DecoderLM:
                 h = ffn(lp["ffn"], h, cfg)
             if "ln2_post" in lp:
                 h = rms_norm(h, lp["ln2_post"])
-            return x + h, cache
+            return self._act_quant(x + h), cache
 
         x, caches = jax.lax.scan(body, x, (params["layers"], windows, caches),
                                  unroll=self.unroll)
         x = rms_norm(x, params["final_ln"])
-        logits = unembed(params["embed"], x[:, -1:], cfg.final_softcap)
+        if lengths is None:
+            x_last = x[:, -1:]
+        else:  # each row's last real token (right-padded layout)
+            idx = jnp.clip(lengths - 1, 0, S - 1)
+            x_last = x[jnp.arange(B), idx][:, None, :]
+        logits = unembed(params["embed"], x_last, cfg.final_softcap)
         return logits, caches
 
     def decode_step(self, params, tokens, caches):

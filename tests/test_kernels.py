@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.formats import POSIT8, POSIT16, PositFormat
+from repro.core.formats import POSIT8, POSIT16, POSIT_FORMATS, PositFormat
 from repro.kernels import ops, ref
 
 FMTS = [POSIT8, POSIT16, PositFormat(12, 2)]
@@ -85,3 +85,83 @@ def test_batched_kv_attention_wrapper():
                                         jnp.asarray(S), fmt)
             np.testing.assert_allclose(np.asarray(out[b, h]),
                                        np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused KV attention ≡ its oracle, BITWISE.  The oracle mirrors the kernel's
+# block schedule and is itself jitted (so both realizations get the same XLA
+# fusion freedom — eager evaluation drifts by 1 ulp across the block-carry
+# FMA); with that, fused and oracle agree to the last mantissa bit on CPU
+# interpret mode for every registered posit format.
+# ---------------------------------------------------------------------------
+def _kv_case(fmt, S, seed):
+    rng = np.random.default_rng(seed)
+    G, D = 4, 64
+    q = jnp.asarray(rng.normal(size=(G, D)), jnp.float32)
+    k_bits = ref.encode_ref(
+        jnp.asarray(rng.normal(size=(S, D)), jnp.float32), fmt)
+    v_bits = ref.encode_ref(
+        jnp.asarray(rng.normal(size=(S, D)), jnp.float32), fmt)
+    return q, k_bits, v_bits
+
+
+@pytest.mark.parametrize("fmt_name", sorted(POSIT_FORMATS))
+@pytest.mark.parametrize("S,bs", [(700, 256), (512, 512), (96, 256)],
+                         ids=["ragged-blocks", "exact", "sub-block"])
+def test_kv_attention_bitwise_matches_oracle(fmt_name, S, bs):
+    from repro.core.formats import get_format
+    from repro.kernels.posit_kv_attention import posit_kv_attention
+
+    fmt = get_format(fmt_name)
+    q, k_bits, v_bits = _kv_case(fmt, S, seed=5)
+    length = jnp.asarray(S - S // 7, jnp.int32)
+    got = posit_kv_attention(q, k_bits, v_bits, length, fmt, bs=bs,
+                             interpret=True)
+    want = ref.kv_attention_oracle(q, k_bits, v_bits, length, fmt, bs=bs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kv_attention_zero_length_and_zero_seq():
+    """length==0 → zero weights (not a uniform average over garbage);
+    S==0 → zero output without launching a kernel."""
+    from repro.kernels.posit_kv_attention import posit_kv_attention
+
+    fmt = POSIT16
+    q, k_bits, v_bits = _kv_case(fmt, 64, seed=6)
+    got = posit_kv_attention(q, k_bits, v_bits, jnp.asarray(0, jnp.int32),
+                             fmt, bs=64, interpret=True)
+    want = ref.kv_attention_oracle(q, k_bits, v_bits,
+                                   jnp.asarray(0, jnp.int32), fmt, bs=64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert not np.isnan(np.asarray(got)).any()
+
+    empty_k = k_bits[:0]
+    out = posit_kv_attention(q, empty_k, empty_k, jnp.asarray(0, jnp.int32),
+                             fmt, bs=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.zeros(q.shape, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ref.kv_attention_ref(q, empty_k, empty_k,
+                                        jnp.asarray(0, jnp.int32), fmt)),
+        np.zeros(q.shape, np.float32))
+
+
+def test_batched_kv_attention_per_row_lengths():
+    """The serving wrapper takes (B,) per-row lengths: each row must match
+    the single-head reference at ITS OWN length."""
+    fmt = POSIT8
+    B, KV, G, D, S = 3, 2, 2, 64, 256
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(B, KV, G, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    k_bits, v_bits = ref.encode_ref(k, fmt), ref.encode_ref(v, fmt)
+    lengths = jnp.asarray([256, 97, 5], jnp.int32)
+    out = ops.kv_attention(q, k_bits, v_bits, lengths, fmt, bs=128)
+    for b in range(B):
+        for h in range(KV):
+            want = ref.kv_attention_ref(q[b, h], k_bits[b, :, h],
+                                        v_bits[b, :, h], lengths[b], fmt)
+            np.testing.assert_allclose(np.asarray(out[b, h]),
+                                       np.asarray(want),
+                                       rtol=2e-5, atol=2e-5)
