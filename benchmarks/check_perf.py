@@ -36,9 +36,12 @@ import sys
 # anything, and the gated fleet metric
 BENCHMARKS = {
     "stream": {
+        # devices/workers are part of the key: a sharded or worker-pool
+        # record must never gate against a single-device baseline
         "comparable": ("patients", "windows", "max_batch", "smoke",
                        "homogeneous", "escalate", "transport", "backend",
-                       "seed", "round_backend", "fused_kernels"),
+                       "seed", "round_backend", "fused_kernels",
+                       "devices", "workers"),
         "metric": "us_per_window",
     },
     "serve": {
@@ -80,11 +83,23 @@ def main():
             sys.exit(f"{which} record is "
                      f"{doc.get('benchmark')!r}, expected {want!r} "
                      f"(wrong --benchmark?)")
-    mismatched = [k for k in spec["comparable"]
-                  if base["config"].get(k) != cur["config"].get(k)]
-    if mismatched:
-        sys.exit(f"baseline/current configs are not comparable on "
-                 f"{mismatched}: {[(k, base['config'].get(k), cur['config'].get(k)) for k in mismatched]}")
+    # smoke_baseline may be a single entry (dict) or a list of entries,
+    # one per recorded topology (e.g. devices=1 and devices=4): gate
+    # against the entry whose comparable config matches the current run
+    entries = base if isinstance(base, list) else [base]
+    matches = [e for e in entries
+               if all(e["config"].get(k) == cur["config"].get(k)
+                      for k in spec["comparable"])]
+    if not matches:
+        lines = []
+        for i, e in enumerate(entries):
+            mm = [(k, e["config"].get(k), cur["config"].get(k))
+                  for k in spec["comparable"]
+                  if e["config"].get(k) != cur["config"].get(k)]
+            lines.append(f"  entry {i} mismatches {mm}")
+        sys.exit("no smoke_baseline entry is comparable to the current "
+                 "config:\n" + "\n".join(lines))
+    base = matches[0]
 
     metric = spec["metric"]
     b_us = base["fleet"][metric]

@@ -16,6 +16,16 @@ per-format throughput (windows/sec) and model energy (nJ/window).
   python benchmarks/stream_bench.py --json --ab fused,unfused,codec \
                                     --smoke-baseline   # regenerate the
                                                  # committed record + CI gate
+  python benchmarks/stream_bench.py --devices 4  # shard_map dispatch over 4
+                                                 # forced host devices
+  python benchmarks/stream_bench.py --workers 2 --transport tcp
+                                                 # fleet split across worker
+                                                 # processes (one engine and
+                                                 # GIL per worker)
+  python benchmarks/stream_bench.py --json --scaling 1,2,4 \
+                                    --scaling-patients 32,64
+                                                 # commit the device-count ×
+                                                 # fleet-size scaling curve
 
 Output follows benchmarks/run.py conventions: ``name,us_per_call,derived``
 CSV rows, one per (task, format) group plus a fleet rollup.  ``--json``
@@ -172,13 +182,17 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
         homogeneous: bool = False, escalate: bool = False, seed: int = 0,
         json_path=None, forest=None, transport: str = "inproc",
         stall: int = 0, stall_timeout_s: float = 1.5,
-        pad_policy=None, fused=None, round_backend=None):
+        pad_policy=None, fused=None, round_backend=None,
+        devices: int = 0, workers: int = 0):
     """Build and stream the fleet; returns the machine-readable result doc
     (and writes it to ``json_path`` when given).
 
     ``fused``/``round_backend`` override the backend selection for this
     run only (the A/B harness alternates them); ``None`` keeps the
-    process-wide setting.
+    process-wide setting.  ``devices > 1`` shards every dispatch over a
+    forced host device mesh (the caller must have set XLA_FLAGS before jax
+    imported — ``main()`` does); ``workers > 1`` partitions the fleet
+    across spawned worker processes instead (TCP transport only).
     """
     from repro.core.arith import backend_overrides
 
@@ -187,6 +201,19 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
     if stall and transport == "inproc":
         raise ValueError("--stall needs a transport (loopback or tcp): "
                          "the in-process driver has no stall clock")
+    if workers and workers > 1:
+        if transport != "tcp":
+            raise ValueError("--workers needs --transport tcp: the pool IS "
+                             "a set of TCP ingest servers")
+        if escalate:
+            raise ValueError("--escalate is per-engine state; not supported "
+                             "across --workers yet")
+        if fused is not None or round_backend is not None:
+            raise ValueError("A/B backend overrides do not cross the "
+                             "worker-pool spawn boundary")
+        return _run_workers(patients, windows, max_batch, smoke,
+                            homogeneous, seed, json_path, stall,
+                            stall_timeout_s, pad_policy, devices, workers)
     if forest is None:
         t0 = time.perf_counter()
         forest = build_forest()
@@ -198,12 +225,13 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
             round_backend=round_backend):
         return _run_measured(patients, windows, max_batch, smoke,
                              homogeneous, escalate, seed, json_path, forest,
-                             transport, stall, stall_timeout_s, pad_policy)
+                             transport, stall, stall_timeout_s, pad_policy,
+                             devices)
 
 
 def _run_measured(patients, windows, max_batch, smoke, homogeneous,
                   escalate, seed, json_path, forest, transport, stall,
-                  stall_timeout_s, pad_policy):
+                  stall_timeout_s, pad_policy, devices=0):
     import jax
 
     from repro.core.arith import get_fused_kernels, get_round_backend
@@ -219,6 +247,10 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
     else:
         sim = _build_simulator(patients, windows, mixed, stall, seed)
         queues, pins = None, sim.pins
+    mesh_info = None
+    if devices > 1:
+        from repro.launch.mesh import make_fleet_mesh_info
+        mesh_info = make_fleet_mesh_info(devices)
     engine = StreamEngine({"cough": cough_pipeline(forest),
                            "rpeak": rpeak_pipeline()},
                           router=PrecisionRouter(
@@ -227,7 +259,8 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
                               else None),
                           max_batch=max_batch,
                           # one compiled shape per arm unless overridden
-                          pad_policy=pad_policy or "max")
+                          pad_policy=pad_policy or "max",
+                          mesh_info=mesh_info)
     supervisor = Supervisor(engine, capacity=4096)
 
     if not smoke:  # warm the compile caches, then measure steady state
@@ -275,6 +308,7 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
                    "fused_kernels": "on" if get_fused_kernels() else "off",
                    "transport": transport, "stall": stall,
                    "pad_strategy": engine.pad_strategy(),
+                   "devices": max(1, devices), "workers": 1,
                    # wall-clock provenance of the groups' timing columns:
                    # a single measured pass, unless the --ab harness
                    # overrides them with its fused-arm medians
@@ -282,6 +316,8 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
         "groups": groups,
         "ab": None,             # filled by the --ab paired harness
         "smoke_baseline": None,  # filled by --smoke-baseline (CI perf gate)
+        "scaling": None,        # filled by the --scaling curve harness
+        "microbench": None,     # filled by --microbench
         "escalation": {
             "patients": esc,
             "windows_escalated": esc_windows,
@@ -293,6 +329,8 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
             "counters": engine.ledger.transport_summary()["fleet"],
             "latency_ms": tele["latency_ms"],
             "result_queue": tele["queue"],
+            "workers": None,    # per-worker rows (worker-pool runs only)
+            "servers": None,    # summed server counters (worker-pool runs)
         },
         "wall": {"elapsed_s": wall, "windows": n,
                  "end_to_end_windows_per_s": n / wall},
@@ -300,6 +338,151 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
     if json_path:
         write_json(doc, json_path)
     return doc
+
+
+def _run_workers(patients, windows, max_batch, smoke, homogeneous, seed,
+                 json_path, stall, stall_timeout_s, pad_policy, devices,
+                 workers):
+    """Worker-pool measured pass: the fleet partitioned across spawned
+    processes (each a full TCP ingest server + device-local engine), the
+    per-worker telemetry merged into the standard doc shape."""
+    import jax
+
+    from repro.core.arith import get_fused_kernels, get_round_backend
+    from repro.ingest.workers import run_worker_fleet
+
+    sim = _build_simulator(patients, windows, not homogeneous, stall, seed)
+    roll = run_worker_fleet(sim, workers, devices=devices,
+                            max_batch=max_batch,
+                            pad_policy=pad_policy or "max",
+                            stall_timeout_s=stall_timeout_s,
+                            arrival_seed=seed + 2)
+    n = roll["windows"]
+    expect = patients * windows
+    if stall == 0:
+        assert n == expect, f"windows processed {n} != expected {expect}"
+    else:
+        assert (patients - stall) * windows <= n <= expect, (n, expect)
+    groups = {}
+    for key, row in roll["groups"].items():
+        us = 1e6 / row["windows_per_s"] if row["windows_per_s"] else 0.0
+        groups[key] = {"us_per_window": us, **row}
+    esc = roll["escalation"]
+    esc_windows = sum(int(d["windows"]) for d in esc.values())
+    doc = {
+        "benchmark": "stream_bench",
+        "config": {"patients": patients, "windows": windows,
+                   "max_batch": max_batch, "smoke": smoke,
+                   "homogeneous": homogeneous, "escalate": False,
+                   "seed": seed, "backend": jax.default_backend(),
+                   "round_backend": get_round_backend(),
+                   "fused_kernels": "on" if get_fused_kernels() else "off",
+                   "transport": "tcp", "stall": stall,
+                   "pad_strategy": pad_policy or "max",
+                   "devices": max(1, devices), "workers": workers,
+                   "measured": "worker_pool"},
+        "groups": groups,
+        "ab": None,
+        "smoke_baseline": None,
+        "scaling": None,
+        "microbench": None,
+        "escalation": {
+            "patients": esc,
+            "windows_escalated": esc_windows,
+            "extra_nj": sum(d["extra_nj"] for d in esc.values()),
+            "rate": esc_windows / n if n else 0.0,
+        },
+        "transport": {
+            "mode": "tcp",
+            "counters": roll["transport"]["fleet"],
+            "latency_ms": roll["latency_ms"],
+            "result_queue": roll["result_queue"],
+            "workers": roll["workers"],
+            "servers": roll["servers"],
+        },
+        "wall": {"elapsed_s": roll["wall_s"], "windows": n,
+                 "end_to_end_windows_per_s": n / roll["wall_s"]},
+    }
+    if json_path:
+        write_json(doc, json_path)
+    return doc
+
+
+def run_microbench(devices: int = 0, batch: int = 32, reps: int = 30,
+                   fmt: str = "posit16"):
+    """Per-device dispatch microbenchmark: one fixed-shape R-peak batch
+    through the warmed compiled window fn — sharded over the device mesh
+    when ``devices > 1`` — isolating the dispatch floor (device transfer +
+    kernel + materialization) from ingest/session overhead."""
+    import jax
+
+    from repro.stream import rpeak_pipeline
+
+    pipe = rpeak_pipeline()
+    fn = pipe.make_fn(fmt)
+    rng = np.random.default_rng(0)
+    arrays = {m.name: rng.normal(size=(
+        batch, m.channels, pipe.spec.window_samples(m))).astype(np.float32)
+        for m in pipe.spec.modalities}
+    if devices > 1:
+        from repro.distributed.sharding import fleet_pad, make_fleet_batch_fn
+        from repro.launch.mesh import make_fleet_mesh_info
+        B = fleet_pad(batch, devices)
+        arrays = {k: np.concatenate(
+            [v, np.zeros((B - batch,) + v.shape[1:], np.float32)])
+            for k, v in arrays.items()}
+        mask = np.zeros((B,), np.int32)
+        mask[:batch] = 1
+        sfn = make_fleet_batch_fn(fn, make_fleet_mesh_info(devices))
+
+        def call():
+            return sfn(arrays, mask)[0]
+    else:
+        def call():
+            return fn(arrays)
+    jax.block_until_ready(call())          # compile + warm
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        times.append(time.perf_counter() - t0)
+    us = _median(times) * 1e6
+    return {"task": "rpeak", "fmt": fmt, "batch": batch, "reps": reps,
+            "devices": max(1, devices),
+            "us_per_dispatch": us, "us_per_window": us / batch}
+
+
+def run_scaling(device_counts, patient_counts, windows, max_batch, seed):
+    """The committed scaling curve: one COLD subprocess per (device count,
+    fleet size) grid point — the forced XLA host-device split must be set
+    before jax imports, so every point needs its own process — each a full
+    warmed run plus the per-device dispatch microbenchmark, so the curve
+    measures steady-state throughput, not compile time."""
+    import subprocess
+    import tempfile
+    grid = []
+    for d in device_counts:
+        for p in patient_counts:
+            print(f"# scaling point devices={d} patients={p}",
+                  file=sys.stderr)
+            with tempfile.TemporaryDirectory() as tmp:
+                path = os.path.join(tmp, "scaling.json")
+                subprocess.run([sys.executable, os.path.abspath(__file__),
+                                "--patients", str(p),
+                                "--windows", str(windows),
+                                "--max-batch", str(max_batch),
+                                "--seed", str(seed),
+                                "--devices", str(d),
+                                "--microbench", "--json", path],
+                               check=True)
+                with open(path) as f:
+                    sdoc = json.load(f)
+            grid.append({"devices": max(1, d), "patients": p,
+                         "fleet": sdoc["groups"]["fleet"],
+                         "wall": sdoc["wall"],
+                         "microbench": sdoc["microbench"]})
+    return {"windows": windows, "max_batch": max_batch, "workers": 1,
+            "grid": grid}
 
 
 def write_json(doc, json_path):
@@ -381,6 +564,26 @@ def main():
     ap.add_argument("--stall-timeout", type=float, default=1.5,
                     metavar="S", help="session stall timeout in seconds "
                     "(transport modes; default 1.5)")
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="shard every dispatch over N forced host devices "
+                         "(XLA_FLAGS is set before jax imports; outputs "
+                         "stay bit-identical to single-device)")
+    ap.add_argument("--workers", type=int, default=0, metavar="M",
+                    help="partition the fleet across M spawned worker "
+                         "processes, one TCP ingest server + engine each "
+                         "(forces --transport tcp; combine with --devices "
+                         "for the processes × devices topology)")
+    ap.add_argument("--microbench", action="store_true",
+                    help="additionally time the per-device dispatch floor "
+                         "(one fixed R-peak batch, warmed) into the JSON "
+                         "'microbench' block")
+    ap.add_argument("--scaling", default=None, metavar="DEVICES",
+                    help="comma list of device counts: run one cold warmed "
+                         "subprocess per (devices, fleet size) grid point "
+                         "and embed the scaling curve (needs --json)")
+    ap.add_argument("--scaling-patients", default=None, metavar="SIZES",
+                    help="comma list of fleet sizes for the --scaling grid "
+                         "(default: the run's --patients)")
     ap.add_argument("--pad-policy", choices=("max", "pow2", "auto"),
                     default=None,
                     help="dispatch padding strategy (default max; auto "
@@ -413,9 +616,24 @@ def main():
         ap.error("--patients must be ≥ 2 (one cough + one ECG arm)")
     if args.ab and args.repeat < 1:
         ap.error("--repeat must be ≥ 1")
-    if (args.ab or args.smoke_baseline) and not args.json:
-        ap.error("--ab/--smoke-baseline results only land in the JSON "
-                 "record: pass --json [PATH]")
+    if (args.ab or args.smoke_baseline or args.scaling) and not args.json:
+        ap.error("--ab/--smoke-baseline/--scaling results only land in the "
+                 "JSON record: pass --json [PATH]")
+    if args.workers > 1:
+        if args.transport == "inproc":
+            print("# --workers forces --transport tcp", file=sys.stderr)
+            args.transport = "tcp"
+        if args.ab:
+            ap.error("--ab backend overrides cannot cross the worker-pool "
+                     "spawn boundary")
+    if args.devices > 1:
+        # the forced host device split must land in the environment before
+        # the FIRST jax import in this process (forest training below
+        # already imports jax) — append, never clobber, inherited flags
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        prev = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in prev:
+            os.environ["XLA_FLAGS"] = (prev + " " + flag).strip()
 
     forest = None
     if args.ab or args.smoke_baseline:
@@ -428,7 +646,8 @@ def main():
                   escalate=args.escalate, seed=args.seed,
                   transport=args.transport, stall=args.stall,
                   stall_timeout_s=args.stall_timeout,
-                  pad_policy=args.pad_policy)
+                  pad_policy=args.pad_policy,
+                  devices=args.devices, workers=args.workers)
     doc = run(forest=forest, **kwargs)
     if args.ab:
         doc["ab"] = run_ab(args.ab.split(","), args.repeat, forest,
@@ -446,18 +665,32 @@ def main():
         # the CI gate runs `--smoke --json` in a COLD process (compile time
         # included), so the baseline must be recorded the same way — a warm
         # in-process pass would under-read by the whole jit-cache warmup
-        # and the gate would flake on every cold CI run
+        # and the gate would flake on every cold CI run.  One entry per
+        # gated topology: single-device, and the multi-device fast lane's
+        # sharded smoke (check_perf selects by matching config keys)
         import subprocess
         import tempfile
-        with tempfile.TemporaryDirectory() as tmp:
-            path = os.path.join(tmp, "smoke_baseline.json")
-            subprocess.run([sys.executable, os.path.abspath(__file__),
-                            "--smoke", "--json", path,
-                            "--seed", str(args.seed)], check=True)
-            with open(path) as f:
-                sdoc = json.load(f)
-        doc["smoke_baseline"] = {"config": sdoc["config"],
-                                 "fleet": sdoc["groups"]["fleet"]}
+        entries = []
+        for dev in (1, 4):
+            with tempfile.TemporaryDirectory() as tmp:
+                path = os.path.join(tmp, "smoke_baseline.json")
+                subprocess.run([sys.executable, os.path.abspath(__file__),
+                                "--smoke", "--devices", str(dev),
+                                "--json", path,
+                                "--seed", str(args.seed)], check=True)
+                with open(path) as f:
+                    sdoc = json.load(f)
+            entries.append({"config": sdoc["config"],
+                            "fleet": sdoc["groups"]["fleet"]})
+        doc["smoke_baseline"] = entries
+    if args.microbench:
+        doc["microbench"] = run_microbench(devices=args.devices)
+    if args.scaling:
+        device_counts = [int(d) for d in args.scaling.split(",")]
+        patient_counts = ([int(p) for p in args.scaling_patients.split(",")]
+                          if args.scaling_patients else [patients])
+        doc["scaling"] = run_scaling(device_counts, patient_counts,
+                                     windows, max_batch, args.seed)
     if args.json:
         write_json(doc, args.json)
     for key, row in doc["groups"].items():
@@ -484,6 +717,25 @@ def main():
           f"latency_p50_ms={tr['latency_ms']['p50']:.2f};"
           f"latency_p99_ms={tr['latency_ms']['p99']:.2f};"
           f"queue_dropped={tr['result_queue']['dropped']}")
+    if doc["transport"]["workers"]:
+        for w in doc["transport"]["workers"]:
+            print(f"stream_bench/worker/{w['worker_id']},0,"
+                  f"windows={w['windows']};devices={w['devices']}")
+    if doc["microbench"]:
+        mb = doc["microbench"]
+        print(f"stream_bench/microbench,{mb['us_per_dispatch']:.0f},"
+              f"task={mb['task']};fmt={mb['fmt']};batch={mb['batch']};"
+              f"devices={mb['devices']};"
+              f"us_per_window={mb['us_per_window']:.1f}")
+    if doc["scaling"]:
+        for e in doc["scaling"]["grid"]:
+            f = e["fleet"]
+            print(f"stream_bench/scaling/d{e['devices']}p{e['patients']},"
+                  f"{f['us_per_window']:.0f},"
+                  f"windows_per_s={f['windows_per_s']:.1f};"
+                  f"nj_per_window={f['nj_per_window']:.1f};"
+                  f"end_to_end_windows_per_s="
+                  f"{e['wall']['end_to_end_windows_per_s']:.1f}")
     if doc["ab"]:
         arms = doc["ab"]["arms"]
         for key in sorted(next(iter(arms.values()))["groups"]):

@@ -1,1 +1,2 @@
-from .sharding import MeshInfo, logical_spec, shard_leaf  # noqa: F401
+from .sharding import (MeshInfo, fleet_pad, logical_spec,  # noqa: F401
+                       make_fleet_batch_fn, shard_leaf)

@@ -46,6 +46,22 @@ def posit_all_reduce(x: jax.Array, axis_name: str, axis_size: int,
     return out.reshape(x.shape)
 
 
+def ledger_psum(x, axis_name):
+    """Exact sum-all-reduce of device-local ledger rows over the fleet's
+    data axis — the reduction the sharded ``StreamEngine`` dispatch routes
+    its per-device ``EnergyLedger`` contributions (real-window and padding
+    counts) through.  Accepts any pytree of arrays; must run inside
+    shard_map with ``axis_name`` manual.
+
+    Unlike the posit-compressed gradient path above, ledger rows are small
+    integer counters where exactness is the whole point, so they ride a
+    plain ``lax.psum``: integers (and integer-valued floats well below 2^24)
+    reduce bit-exactly regardless of device count, which is what keeps the
+    sharded ledger identical to the single-device one.
+    """
+    return lax.psum(x, axis_name)
+
+
 def posit_all_reduce_ef(x: jax.Array, residual: Optional[jax.Array],
                         axis_name: str, axis_size: int, fmt: PositFormat
                         ) -> Tuple[jax.Array, jax.Array]:

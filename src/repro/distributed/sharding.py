@@ -20,10 +20,14 @@ records where that happened.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,3 +98,60 @@ def shard_leaf(minfo: MeshInfo, dims) -> NamedSharding:
 
 def replicated(minfo: MeshInfo) -> NamedSharding:
     return NamedSharding(minfo.mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Fleet dispatch sharding: patient-batched window functions over the data axis
+# ---------------------------------------------------------------------------
+
+def fleet_pad(n: int, n_shards: int) -> int:
+    """Smallest multiple of ``n_shards`` ≥ ``n`` — the batch size a sharded
+    dispatch pads to so every device gets an equal slab.  Padding rows are
+    zeros and, because the window functions are row-independent, never
+    affect real rows (the same contract the single-device bucket padding
+    relies on)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be ≥ 1, got {n_shards}")
+    return -(-int(n) // int(n_shards)) * int(n_shards)
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_batch_fn_cached(fn, minfo: MeshInfo):
+    from repro.distributed.collectives import ledger_psum
+
+    axes = tuple(minfo.dp_axes)
+    spec = P(axes if len(axes) > 1 else axes[0])
+
+    def local(arrays, mask):
+        outs = fn(arrays)
+        # device-local ledger row: [real windows, padding rows] — reduced
+        # through the collectives psum path so the host-side ledger records
+        # the fleet total, not one shard's view
+        row = jnp.stack([jnp.sum(mask), jnp.sum(1 - mask)])
+        return outs, ledger_psum(row, axes)
+
+    sm = shard_map(local, mesh=minfo.mesh, in_specs=(spec, spec),
+                   out_specs=(spec, P()), check_vma=False)
+    return jax.jit(sm)
+
+
+def make_fleet_batch_fn(fn, minfo: MeshInfo):
+    """Wrap a row-independent batched window function for multi-device
+    dispatch: inputs (a dict of ``(B, channels, n)`` arrays plus a ``(B,)``
+    int32 real-row mask) are sharded on the leading patient/window dim over
+    the mesh's data axis, each device runs the identical per-row graph on
+    its slab, and the device-local ledger row ``[real, padded]`` is reduced
+    through ``collectives.ledger_psum``.
+
+    ``B`` must be a multiple of ``minfo.dp_size`` (use ``fleet_pad``).  Any
+    non-data mesh axes see the inputs replicated — the spec only names the
+    data axes, so ``logical_spec``-style replication fallback applies to
+    everything else.
+
+    Bit-identity contract (see ``distributed/README.md``): per-row graphs
+    are identical to the single-device path — sharding splits only the
+    leading dim, every in-row shape is unchanged — so outputs match the
+    unsharded dispatch bitwise.  Cached per (fn, mesh): engines sharing one
+    pipeline share the compiled sharded program.
+    """
+    return _fleet_batch_fn_cached(fn, minfo)

@@ -17,10 +17,14 @@ from .server import IngestServer
 from .sessions import ModalityState, PatientSession, SessionManager
 from .simulator import FleetSimulator, PatientPlan
 from .supervisor import Supervisor
+from .workers import (WorkerConfig, aggregate_rollup, partition_plans,
+                      run_worker_fleet)
 
 __all__ = [
     "BYE", "DATA", "HELLO", "FleetSimulator", "Frame", "FrameDecoder",
     "IngestServer", "ModalityState", "PatientPlan", "PatientSession",
-    "ProtocolError", "SessionManager", "Supervisor", "bye", "data",
-    "decode_body", "encode_frame", "encode_stream", "hello", "loopback",
+    "ProtocolError", "SessionManager", "Supervisor", "WorkerConfig",
+    "aggregate_rollup", "bye", "data", "decode_body", "encode_frame",
+    "encode_stream", "hello", "loopback", "partition_plans",
+    "run_worker_fleet",
 ]

@@ -42,6 +42,8 @@ class ModalityState:
     next_seq: int = 0
     held: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
     in_gap: bool = False           # a hole is currently open
+    last_seen: float = 0.0         # last DATA arrival for THIS modality
+    stalled: bool = False          # currently past its modality timeout
 
 
 @dataclasses.dataclass
@@ -73,11 +75,19 @@ class SessionManager:
 
     def __init__(self, engine: StreamEngine, stall_timeout_s: float = 30.0,
                  reorder_cap: int = 256,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 modality_timeouts: Optional[Dict[str, float]] = None):
+        """``modality_timeouts`` maps a modality name to its own stall
+        threshold (seconds); modalities not named fall back to
+        ``stall_timeout_s``.  A stalled modality is *noted* (counted in the
+        ledger's ``modality_stalls`` column, flagged until it recovers) but
+        never evicts the patient while other modalities keep the session
+        alive — an IMU dropout must not kill a live ECG stream."""
         self.engine = engine
         self.stall_timeout_s = float(stall_timeout_s)
         self.reorder_cap = int(reorder_cap)
         self.clock = clock
+        self.modality_timeouts = dict(modality_timeouts or {})
         self.sessions: Dict[str, PatientSession] = {}
 
     # -- lifecycle ------------------------------------------------------------
@@ -130,13 +140,17 @@ class SessionManager:
         if s.done:
             raise ProtocolError(
                 f"DATA for {frame.patient!r} after BYE")
-        self._on_data(s, frame)
+        self._on_data(s, frame, now)
 
     # -- sequencing -----------------------------------------------------------
-    def _on_data(self, s: PatientSession, frame: Frame) -> None:
+    def _on_data(self, s: PatientSession, frame: Frame, now: float) -> None:
         led = self.engine.ledger
         led.record_transport(s.patient, frames=1, bytes=frame.nbytes())
-        m = s.modalities.setdefault(frame.modality, ModalityState())
+        m = s.modalities.setdefault(frame.modality,
+                                    ModalityState(last_seen=now))
+        m.last_seen = now
+        m.stalled = False          # any arrival ends the stall; a later
+                                   # dropout counts as a fresh stall event
         seq = frame.seq
         if seq < m.next_seq or seq in m.held:
             led.record_transport(s.patient, dup_frames=1)
@@ -176,7 +190,18 @@ class SessionManager:
         now = self.clock() if now is None else now
         evicted: List[str] = []
         for s in self.sessions.values():
-            if s.closed or now - s.last_seen < self.stall_timeout_s:
+            if s.closed:
+                continue
+            # per-modality stall detection first: a dropped-out modality on
+            # an otherwise-live session is counted and flagged, not evicted
+            for mod, m in s.modalities.items():
+                timeout = self.modality_timeouts.get(mod,
+                                                     self.stall_timeout_s)
+                if not m.stalled and now - m.last_seen >= timeout:
+                    m.stalled = True
+                    self.engine.ledger.record_transport(
+                        s.patient, modality_stalls=1)
+            if now - s.last_seen < self.stall_timeout_s:
                 continue
             s.evicted = True
             stats = self.engine.evict_patient(s.patient, s.task)

@@ -210,16 +210,20 @@ class FleetSimulator:
 
     async def run_tcp(self, host: str, port: int, arrival_seed: int = 1,
                       realtime_factor: float = 0.0,
-                      jitter_s: float = 0.0) -> None:
+                      jitter_s: float = 0.0,
+                      plans: Optional[Sequence[PatientPlan]] = None) -> None:
         """One asyncio client per patient against a live ``IngestServer``.
 
         ``realtime_factor`` r > 0 sleeps chunk_duration/r between frames
         (r=1 is wall-clock-faithful replay); 0 sends as fast as the socket
         allows.  ``jitter_s`` adds uniform random inter-frame delay.  A plan
         with several segments closes the socket between them — a mid-window
-        disconnect — and reconnects for the next.
+        disconnect — and reconnects for the next.  ``plans`` restricts the
+        drive to a subset of the fleet — how the multi-process worker pool
+        points each patient at the worker that owns it.
         """
         rng = np.random.default_rng(arrival_seed)
+        plans = self.plans if plans is None else list(plans)
 
         async def one_patient(plan: PatientPlan, seed: int) -> None:
             prng = np.random.default_rng(seed)
@@ -247,7 +251,7 @@ class FleetSimulator:
 
         await asyncio.gather(*(
             one_patient(plan, int(rng.integers(1 << 31)))
-            for plan in self.plans))
+            for plan in plans))
 
     # -- conveniences ---------------------------------------------------------
     def pin_all(self, engine: StreamEngine) -> None:

@@ -94,6 +94,13 @@ class Supervisor:
                       key=lambda r: r.widx)
 
     # -- telemetry ------------------------------------------------------------
+    def latency_samples(self) -> List[float]:
+        """The fleet-wide ready→result latency reservoir (seconds) — raw
+        samples, so a multi-worker aggregator can compute TRUE fleet
+        percentiles from the concatenation instead of averaging per-worker
+        percentiles (which has no statistical meaning)."""
+        return list(self._fleet_lat)
+
     def telemetry(self) -> Dict[str, object]:
         pats: Dict[str, Dict[str, float]] = {}
         for pid, st in sorted(self._patients.items()):

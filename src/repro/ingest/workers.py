@@ -1,0 +1,374 @@
+"""Multi-process ingest workers: the patient fleet partitioned across OS
+processes, each feeding a device-local engine.
+
+The single-process server has a structural ceiling: the asyncio reader
+coroutines and the engine's jit dispatch contend for one GIL, so past a few
+thousand frames/sec the socket reads starve while XLA runs (the ROADMAP's
+known GIL contention).  The worker pool retires that by partitioning the
+fleet:
+
+* each **worker process** owns a disjoint patient subset and runs the full
+  single-process stack — ``IngestServer`` → ``SessionManager`` →
+  ``StreamEngine`` (optionally sharded over that process's device mesh) →
+  ``Supervisor`` — on its own GIL and its own XLA runtime;
+* clients connect to the worker that owns their patient (the pool publishes
+  a ``{patient: port}`` map); the wire protocol is unchanged — a worker IS
+  a PR-4 ingest server, just one of many;
+* when every client is done the pool asks each worker to drain (sessions
+  close via BYE or the stall reaper), then collects one telemetry payload
+  per worker and merges them into a single fleet rollup:
+  per-(task, format) ledger rows are summed field-wise, transport counters
+  summed per patient (patient sets are disjoint), and latency percentiles
+  recomputed from the CONCATENATED reservoirs — never averaged percentiles.
+
+Workers are spawned (never forked): a forked child would inherit the
+parent's initialized XLA runtime, and ``--xla_force_host_platform_device_
+count`` must be set before the child's first jax import, which is exactly
+what ``spawn`` + the env hook here guarantees.
+
+Determinism: a worker builds its pipelines from the same seeds as the
+parent (the reference forest is retrained per process, bit-identically), so
+the windows a worker scores match what the single-process engine would have
+produced for the same patients — the existing TCP-vs-inproc parity suite
+pins that contract per process.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import multiprocessing as mp
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .simulator import FleetSimulator, PatientPlan
+
+_PCTS = (50, 90, 99)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerConfig:
+    """Everything a worker process needs to build its stack (picklable —
+    crosses the spawn boundary)."""
+
+    worker_id: int
+    tasks: Tuple[str, ...]              # pipelines to build
+    pins: Tuple[Tuple[str, str], ...]   # (patient, fmt) router pins
+    n_patients: int = 0                 # sessions to expect before draining
+    devices: int = 0                    # forced host devices (0 = inherit)
+    max_batch: int = 32
+    pad_policy: str = "max"
+    stall_timeout_s: float = 1.5
+    high_watermark: int = 4096
+    supervisor_capacity: int = 4096
+    # reference-forest recipe (cough pipelines only) — retrained per
+    # process from the same seed, so every worker holds identical trees
+    forest_train: Tuple[int, int, int, int] = (96, 123, 10, 5)
+
+
+def _worker_env(cfg: WorkerConfig) -> None:
+    """Set the XLA device split BEFORE the first jax import in this
+    process.  Appends to any inherited XLA_FLAGS rather than clobbering."""
+    if cfg.devices > 1:
+        flag = f"--xla_force_host_platform_device_count={cfg.devices}"
+        prev = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in prev:
+            os.environ["XLA_FLAGS"] = (prev + " " + flag).strip()
+
+
+def _build_engine(cfg: WorkerConfig):
+    from repro.stream import (PrecisionRouter, StreamEngine, cough_pipeline,
+                              rpeak_pipeline)
+
+    pipelines = {}
+    if "cough" in cfg.tasks:
+        from repro.apps.cough import train_reference_forest
+        n_ref, seed, n_trees, depth = cfg.forest_train
+        pipelines["cough"] = cough_pipeline(train_reference_forest(
+            n_ref, seed, n_trees=n_trees, depth=depth))
+    if "rpeak" in cfg.tasks:
+        pipelines["rpeak"] = rpeak_pipeline()
+    mesh_info = None
+    if cfg.devices > 1:
+        from repro.launch.mesh import make_fleet_mesh_info
+        mesh_info = make_fleet_mesh_info(cfg.devices)
+    return StreamEngine(
+        pipelines,
+        router=PrecisionRouter(patient_formats=dict(cfg.pins)),
+        max_batch=cfg.max_batch, pad_policy=cfg.pad_policy,
+        mesh_info=mesh_info)
+
+
+def _worker_payload(engine, supervisor, server) -> Dict[str, object]:
+    tele = supervisor.telemetry()
+    return {
+        "groups": engine.ledger.rows(),
+        "transport": engine.ledger.transport_summary(),
+        "escalation": engine.ledger.escalation_summary(),
+        "patients": tele["patients"],
+        "latency_s": supervisor.latency_samples(),
+        "queue": tele["queue"],
+        "server": {"connections_total": server.connections_total,
+                   "protocol_errors": server.protocol_errors,
+                   "session_errors": server.session_errors},
+        "windows": supervisor.total_windows,
+        "devices": engine.dp_size,
+    }
+
+
+def worker_main(cfg: WorkerConfig, conn) -> None:
+    """Worker process entry point: serve, drain on request, report, exit.
+
+    Conn protocol (parent → worker): ``("drain", deadline_s)`` once every
+    client is done.  Worker → parent: ``("ready", port)`` after bind, then
+    ``("result", payload)`` or ``("error", repr)`` before exit.
+    """
+    _worker_env(cfg)
+    try:
+        from repro.ingest import IngestServer, SessionManager, Supervisor
+
+        engine = _build_engine(cfg)
+        sessions = SessionManager(engine,
+                                  stall_timeout_s=cfg.stall_timeout_s)
+        supervisor = Supervisor(engine, capacity=cfg.supervisor_capacity)
+
+        async def serve() -> Dict[str, object]:
+            async with IngestServer(
+                    sessions, port=0, high_watermark=cfg.high_watermark,
+                    reap_interval_s=cfg.stall_timeout_s / 4) as srv:
+                conn.send(("ready", srv.port))
+                done = [False]
+                pump = asyncio.ensure_future(
+                    supervisor.run_async(0.005, stop=lambda: done[0]))
+                # wait for the parent's drain request without blocking the
+                # event loop (Pipe.poll is cheap)
+                while not conn.poll():
+                    await asyncio.sleep(0.02)
+                _, deadline_s = conn.recv()
+                deadline = time.perf_counter() + deadline_s
+                # the drain request races the kernel socket buffers: the
+                # clients have WRITTEN everything, but this loop may not
+                # have PARSED it yet — so wait until every assigned patient
+                # has shown up AND closed (BYE or the stall reaper), not
+                # merely until the current session set looks closed
+                def drained() -> bool:
+                    return (len(sessions.sessions) >= cfg.n_patients
+                            and (not sessions.sessions
+                                 or sessions.all_closed()))
+                while not drained():
+                    if time.perf_counter() > deadline:
+                        break
+                    await asyncio.sleep(0.02)
+                done[0] = True
+                await pump
+                return _worker_payload(engine, supervisor, srv)
+
+        payload = asyncio.run(serve())
+        conn.send(("result", payload))
+    except BaseException as e:  # noqa: BLE001 — must cross the pipe
+        try:
+            conn.send(("error", repr(e)))
+        finally:
+            raise
+    finally:
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# fleet rollup: merge per-worker payloads into one telemetry document
+# ---------------------------------------------------------------------------
+
+def _percentiles_ms(lat_s: List[float]) -> Dict[str, float]:
+    if not lat_s:
+        return {f"p{p}": 0.0 for p in _PCTS}
+    ms = np.asarray(lat_s) * 1e3
+    return {f"p{p}": float(np.percentile(ms, p)) for p in _PCTS}
+
+
+def aggregate_rollup(payloads: Sequence[Dict[str, object]]
+                     ) -> Dict[str, object]:
+    """Merge worker payloads into the single-process telemetry shape:
+    ``groups`` mirrors ``StreamEngine.fleet_summary()`` (with a fleet
+    rollup row), ``transport``/``latency_ms``/``result_queue`` mirror the
+    supervisor's blocks.  Ledger rows sum field-wise; percentiles are
+    recomputed from concatenated samples."""
+    raw: Dict[str, Dict[str, float]] = {}
+    for p in payloads:
+        for key, row in p["groups"].items():
+            acc = raw.setdefault(key, {k: 0 for k in row})
+            for k, v in row.items():
+                acc[k] += v
+    groups: Dict[str, Dict[str, float]] = {}
+    tot = {"windows": 0, "energy_nj": 0.0, "latency_s": 0.0,
+           "escalated_windows": 0, "escalation_nj": 0.0}
+    for key, g in sorted(raw.items()):
+        groups[key] = {
+            "windows": g["windows"],
+            "batches": g["batches"],
+            "padded_windows": g["padded_windows"],
+            "windows_per_s": (g["windows"] / g["latency_s"]
+                              if g["latency_s"] else 0.0),
+            "nj_per_window": (g["energy_nj"] / g["windows"]
+                              if g["windows"] else 0.0),
+            "total_nj": g["energy_nj"],
+            "escalated_windows": g["escalated_windows"],
+            "escalation_nj": g["escalation_nj"],
+        }
+        for k in tot:
+            tot[k] += g[k]
+    groups["fleet"] = {
+        "windows": tot["windows"],
+        "windows_per_s": (tot["windows"] / tot["latency_s"]
+                          if tot["latency_s"] else 0.0),
+        "nj_per_window": (tot["energy_nj"] / tot["windows"]
+                          if tot["windows"] else 0.0),
+        "total_nj": tot["energy_nj"],
+        "escalated_windows": tot["escalated_windows"],
+        "escalation_nj": tot["escalation_nj"],
+    }
+
+    # transport: patient sets are disjoint, so per-patient rows concatenate
+    # and the fleet row is the sum of the workers' fleet rows
+    transport: Dict[str, Dict[str, int]] = {}
+    fleet_t: Dict[str, int] = {}
+    for p in payloads:
+        for pid, row in p["transport"].items():
+            if pid == "fleet":
+                for k, v in row.items():
+                    fleet_t[k] = fleet_t.get(k, 0) + v
+            else:
+                transport[pid] = dict(row)
+    transport["fleet"] = fleet_t
+
+    lat: List[float] = []
+    queue = {"capacity": 0, "depth": 0, "dropped": 0, "total_windows": 0}
+    patients: Dict[str, object] = {}
+    servers = {"connections_total": 0, "protocol_errors": 0,
+               "session_errors": 0}
+    escalation: Dict[str, Dict[str, float]] = {}
+    for p in payloads:
+        lat.extend(p["latency_s"])
+        for k in queue:
+            queue[k] += p["queue"][k]
+        patients.update(p["patients"])
+        for k in servers:
+            servers[k] += p["server"][k]
+        escalation.update(p["escalation"])
+    return {
+        "groups": groups,
+        "transport": transport,
+        "latency_ms": _percentiles_ms(lat),
+        "result_queue": queue,
+        "patients": patients,
+        "servers": servers,
+        "escalation": escalation,
+        "windows": sum(p["windows"] for p in payloads),
+        "workers": [{"worker_id": i, "windows": p["windows"],
+                     "devices": p["devices"]}
+                    for i, p in enumerate(payloads)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# the pool: spawn workers, route clients, drain, aggregate
+# ---------------------------------------------------------------------------
+
+def partition_plans(plans: Sequence[PatientPlan], n_workers: int
+                    ) -> List[List[PatientPlan]]:
+    """Round-robin by plan index: keeps each worker's task mix close to the
+    fleet's (the simulator orders cough patients before ECG)."""
+    out: List[List[PatientPlan]] = [[] for _ in range(n_workers)]
+    for i, plan in enumerate(plans):
+        out[i % n_workers].append(plan)
+    return out
+
+
+def run_worker_fleet(sim: FleetSimulator, n_workers: int, *,
+                     devices: int = 0, max_batch: int = 32,
+                     pad_policy: str = "max", stall_timeout_s: float = 1.5,
+                     arrival_seed: int = 1, drain_timeout_s: float = 60.0,
+                     start_timeout_s: float = 300.0) -> Dict[str, object]:
+    """Drive one ``FleetSimulator`` replay through ``n_workers`` worker
+    processes and return the aggregated fleet rollup (plus ``wall_s``, the
+    end-to-end client-drive + drain wall clock).
+
+    Each worker gets a disjoint patient subset; TCP clients connect to the
+    worker owning their patient.  ``devices > 1`` additionally shards each
+    worker's dispatch over a forced host device split — processes × devices
+    is the full fleet topology.
+    """
+    if n_workers < 1:
+        raise ValueError(f"need ≥ 1 worker, got {n_workers}")
+    parts = partition_plans(sim.plans, n_workers)
+    ctx = mp.get_context("spawn")
+    procs: List[Tuple[mp.Process, object]] = []
+    try:
+        for wid, plans in enumerate(parts):
+            tasks = tuple(sorted({p.task for p in plans}))
+            pins = tuple(sorted((p.patient, p.fmt) for p in plans
+                                if p.fmt is not None))
+            cfg = WorkerConfig(worker_id=wid, tasks=tasks, pins=pins,
+                               n_patients=len(plans), devices=devices,
+                               max_batch=max_batch, pad_policy=pad_policy,
+                               stall_timeout_s=stall_timeout_s)
+            parent, child = ctx.Pipe()
+            proc = ctx.Process(target=worker_main, args=(cfg, child),
+                               daemon=True)
+            proc.start()
+            child.close()
+            procs.append((proc, parent))
+
+        ports: List[int] = []
+        for wid, (proc, conn) in enumerate(procs):
+            if not conn.poll(start_timeout_s):
+                raise TimeoutError(f"worker {wid} did not report ready "
+                                   f"within {start_timeout_s}s")
+            try:
+                kind, val = conn.recv()
+            except EOFError:
+                raise RuntimeError(
+                    f"worker {wid} died before reporting ready (callers "
+                    "must spawn from a __main__-guarded entry point)")
+            if kind == "error":
+                raise RuntimeError(f"worker {wid} failed to start: {val}")
+            assert kind == "ready", kind
+            ports.append(val)
+
+        t0 = time.perf_counter()
+
+        async def drive() -> None:
+            await asyncio.gather(*(
+                sim.run_tcp("127.0.0.1", ports[wid],
+                            arrival_seed=arrival_seed + wid, plans=plans)
+                for wid, plans in enumerate(parts) if plans))
+
+        asyncio.run(drive())
+        payloads: List[Dict[str, object]] = []
+        for wid, (proc, conn) in enumerate(procs):
+            conn.send(("drain", drain_timeout_s))
+        for wid, (proc, conn) in enumerate(procs):
+            if not conn.poll(drain_timeout_s + start_timeout_s):
+                raise TimeoutError(f"worker {wid} did not report results")
+            try:
+                kind, val = conn.recv()
+            except EOFError:
+                raise RuntimeError(f"worker {wid} died before reporting "
+                                   "results")
+            if kind == "error":
+                raise RuntimeError(f"worker {wid} failed: {val}")
+            payloads.append(val)
+        wall = time.perf_counter() - t0
+        for proc, conn in procs:
+            proc.join(timeout=30.0)
+    finally:
+        for proc, conn in procs:
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=5.0)
+            conn.close()
+    doc = aggregate_rollup(payloads)
+    doc["wall_s"] = wall
+    doc["n_workers"] = n_workers
+    return doc

@@ -108,6 +108,8 @@ class TransportStats:
     late_frames: int = 0          # arrived after eviction, dropped
     abandoned_frames: int = 0     # held for a gap that never filled, lost
     evictions: int = 0            # stall-timeout evictions (0 or 1)
+    modality_stalls: int = 0      # per-modality dropouts noted while the
+                                  # session stayed live on other modalities
     windows_flushed: int = 0      # complete windows dispatched at close
     windows_dropped: int = 0      # pending windows lost (eviction flush
                                   # failed on an unroutable stream)
@@ -163,6 +165,14 @@ class EnergyLedger:
         t = self.transport.setdefault(patient, TransportStats())
         for k, v in deltas.items():
             setattr(t, k, getattr(t, k) + v)  # AttributeError on a typo
+
+    def rows(self) -> Dict[str, Dict[str, float]]:
+        """Raw per-(task, format) totals keyed ``"task/fmt"`` — the
+        mergeable form a multi-process worker ships to its supervisor, which
+        sums fields across workers and re-derives the fleet rollup (see
+        ``repro.ingest.workers.aggregate_rollup``)."""
+        return {f"{task}/{fmt}": dataclasses.asdict(g)
+                for (task, fmt), g in sorted(self.stats.items())}
 
     def transport_summary(self) -> Dict[str, Dict[str, int]]:
         """{patient: counters} plus a "fleet" rollup row (sums)."""

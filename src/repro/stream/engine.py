@@ -87,7 +87,8 @@ class StreamEngine:
                  pad_policy: Optional[str] = None,
                  autotune_horizon: int = 256,
                  pad_auto_threshold: float = 0.25,
-                 result_capacity: Optional[int] = 4096):
+                 result_capacity: Optional[int] = 4096,
+                 mesh_info=None):
         """``pad_to_max``: always pad dispatches to ``max_batch`` — exactly
         one compiled batch shape per (task, format), the steady-state service
         configuration. Default pow2 bucketing compiles more shapes but wastes
@@ -108,6 +109,15 @@ class StreamEngine:
         an undrained engine drops its OLDEST results past the cap (counted
         in ``dropped_results``, with a rate-limited warning) instead of
         growing forever.  ``None`` restores the unbounded legacy behavior.
+
+        ``mesh_info`` (a ``repro.distributed.MeshInfo``, e.g. from
+        ``launch.mesh.make_fleet_mesh_info``) shards every dispatch over the
+        mesh's data axis via shard_map: the batch is padded to a multiple of
+        the data-parallel size, each device runs the identical per-row graph
+        on its slab, and the per-device ledger row is reduced through
+        ``distributed.collectives.ledger_psum``.  Outputs are bit-identical
+        to the single-device path (``tests/test_sharded_fleet.py`` pins
+        this).  A 1-device mesh (or ``None``) takes the plain path.
         """
         self.pipelines = dict(pipelines)
         self.router = router or PrecisionRouter()
@@ -122,6 +132,8 @@ class StreamEngine:
         self.autotune_horizon = int(autotune_horizon)
         self.pad_auto_threshold = float(pad_auto_threshold)
         self._pad_decision: Optional[bool] = None  # auto: None until decided
+        self.mesh_info = mesh_info
+        self.dp_size = int(mesh_info.dp_size) if mesh_info is not None else 1
         self.result_capacity = (None if result_capacity is None
                                 else int(result_capacity))
         self.dropped_results = 0
@@ -273,12 +285,22 @@ class StreamEngine:
             self._fns[key] = self.pipelines[task].make_fn(fmt)
         return self._fns[key]
 
+    def _sharded_fn(self, task: str, fmt: str):
+        """shard_map wrapper over the mesh's data axis (cached per
+        (pipeline fn, mesh) — engines sharing both share the program)."""
+        from repro.distributed.sharding import make_fleet_batch_fn
+        return make_fleet_batch_fn(self._fn(task, fmt), self.mesh_info)
+
     def _dispatch(self, task: str, fmt: str, windows: List[Window]) -> None:
         pipe = self.pipelines[task]
-        fn = self._fn(task, fmt)
         B = len(windows)
         Bpad = self.max_batch if self._effective_pad_to_max() \
             else bucket_size(B, self.max_batch)
+        if self.dp_size > 1:
+            # every device gets an equal slab; the extra rows are ordinary
+            # padding (zeros), indistinguishable from bucket padding
+            from repro.distributed.sharding import fleet_pad
+            Bpad = fleet_pad(Bpad, self.dp_size)
         # fresh per-dispatch buffers: safe to donate to the jit call, so
         # XLA may reuse their pages for outputs instead of allocating
         arrays: Dict[str, np.ndarray] = {}
@@ -289,16 +311,33 @@ class StreamEngine:
                 stack[i] = w.arrays[m.name]
             arrays[m.name] = stack
         t0 = time.perf_counter()
-        outs = fn(arrays)
+        if self.dp_size > 1:
+            mask = np.zeros((Bpad,), np.int32)
+            mask[:B] = 1
+            outs, ledger_row = self._sharded_fn(task, fmt)(arrays, mask)
+        else:
+            outs = self._fn(task, fmt)(arrays)
+            ledger_row = None
         # one device→host materialization per batch; WindowResult rows are
         # zero-copy views into these arrays
         outs = {k: np.asarray(jax.block_until_ready(v))
                 for k, v in outs.items()}
         dt = time.perf_counter() - t0
+        if ledger_row is None:
+            n_real, n_padded = B, Bpad - B
+        else:
+            # the psum-reduced device-local counts ARE the ledger's row; a
+            # mismatch with the host view means the sharding dropped rows
+            n_real, n_padded = (int(v) for v in np.asarray(ledger_row))
+            if n_real != B:
+                raise RuntimeError(
+                    f"sharded dispatch accounted {n_real} real windows, "
+                    f"host staged {B} (task={task!r}, fmt={fmt!r})")
         rows = [{k: v[i] for k, v in outs.items()}
                 for i in range(len(windows))]
         n_esc, esc_nj = self._track(pipe, task, fmt, windows, rows)
-        self.ledger.record(task, fmt, B, Bpad - B, dt, pipe.ops_per_window,
+        self.ledger.record(task, fmt, n_real, n_padded, dt,
+                           pipe.ops_per_window,
                            n_escalated=n_esc, escalation_extra_nj=esc_nj)
         done = time.perf_counter()
         for w, row in zip(windows, rows):

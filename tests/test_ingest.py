@@ -240,6 +240,34 @@ def test_eviction_frees_partially_staged_multimodal_slices(pipelines):
     assert eng.pending_windows() == 0
 
 
+def test_modality_stall_counted_without_evicting_live_session(pipelines):
+    # IMU drops out while audio keeps flowing: the stall is counted once
+    # in the ledger, the patient is NOT evicted, and a recovery followed by
+    # a second dropout counts as a fresh stall event
+    eng = StreamEngine(pipelines, max_batch=8)
+    t = [0.0]
+    sm = SessionManager(eng, stall_timeout_s=100.0, clock=lambda: t[0],
+                        modality_timeouts={"imu": 2.0})
+    sm.on_frame(hello("c0", "cough"))
+    sm.on_frame(data("c0", "cough", "audio", 0, np.zeros((2, 100))))
+    sm.on_frame(data("c0", "cough", "imu", 0, np.zeros((9, 10))))
+    t[0] = 3.0
+    sm.on_frame(data("c0", "cough", "audio", 1, np.zeros((2, 100))))
+    assert sm.reap() == []                  # audio is live: no eviction
+    tr = eng.ledger.transport_summary()["c0"]
+    assert tr["modality_stalls"] == 1 and tr["evictions"] == 0
+    assert sm.reap() == []                  # flagged stall not re-counted
+    assert eng.ledger.transport_summary()["c0"]["modality_stalls"] == 1
+    t[0] = 4.0
+    sm.on_frame(data("c0", "cough", "imu", 1, np.zeros((9, 10))))  # recovers
+    t[0] = 7.0
+    sm.on_frame(data("c0", "cough", "audio", 2, np.zeros((2, 100))))
+    assert sm.reap() == []                  # second dropout, still live
+    tr = eng.ledger.transport_summary()["c0"]
+    assert tr["modality_stalls"] == 2 and tr["evictions"] == 0
+    assert not sm.sessions["c0"].closed
+
+
 # ---------------------------------------------------------------------------
 # Asyncio TCP transport
 # ---------------------------------------------------------------------------

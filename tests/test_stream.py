@@ -309,19 +309,46 @@ def test_stream_bench_json_schema_matches_committed(forest, tmp_path):
                 else set(next(v for k, v in committed["groups"].items()
                               if k != "fleet")))
         assert set(row) == want, name
-    # the committed record carries the paired A/B evidence and the CI
-    # perf-gate baseline; ad-hoc runs emit the keys as None placeholders
+    # the committed record carries the paired A/B evidence, the CI
+    # perf-gate baselines, and the device-count scaling curve; ad-hoc runs
+    # emit the keys as None placeholders
     assert doc["ab"] is None and doc["smoke_baseline"] is None
+    assert doc["scaling"] is None and doc["microbench"] is None
     ab = committed["ab"]
     assert set(ab) >= {"arms", "repeat", "ratio"}
     assert {"fused", "unfused"} <= set(ab["arms"])
     for arm in ab["arms"].values():
         assert set(arm) == {"groups", "wall_s"}
         assert set(arm["groups"]) == set(committed["groups"])
+    # one smoke baseline per gated topology: single-device AND the
+    # multi-device lane's sharded smoke (check_perf selects by config)
     sb = committed["smoke_baseline"]
-    assert set(sb) == {"config", "fleet"}
-    assert set(sb["config"]) == set(committed["config"])
-    assert "us_per_window" in sb["fleet"]
+    assert isinstance(sb, list)
+    assert {e["config"]["devices"] for e in sb} >= {1, 4}
+    for e in sb:
+        assert set(e) == {"config", "fleet"}
+        assert set(e["config"]) == set(committed["config"])
+        assert "us_per_window" in e["fleet"]
+    # the scaling curve: ≥2 device counts (1 included) × ≥1 fleet size,
+    # each grid point a warmed fleet row + the dispatch microbenchmark
+    sc = committed["scaling"]
+    assert set(sc) == {"windows", "max_batch", "workers", "grid"}
+    devs = {e["devices"] for e in sc["grid"]}
+    assert 1 in devs and len(devs) >= 2
+    for e in sc["grid"]:
+        assert set(e) == {"devices", "patients", "fleet", "wall",
+                         "microbench"}
+        for col in ("us_per_window", "windows_per_s", "nj_per_window"):
+            assert col in e["fleet"], col
+        assert "us_per_dispatch" in e["microbench"]
+    # nJ/window is device-count INVARIANT: sharding buys throughput, not
+    # a different energy model (bit-identity's energy corollary)
+    by_p = {}
+    for e in sc["grid"]:
+        by_p.setdefault(e["patients"], set()).add(
+            round(e["fleet"]["nj_per_window"], 6))
+    for p, njs in by_p.items():
+        assert len(njs) == 1, (p, njs)
 
 
 def test_engine_per_patient_format_override(forest):
