@@ -40,7 +40,7 @@ BENCHMARKS = {
         # record must never gate against a single-device baseline
         "comparable": ("patients", "windows", "max_batch", "smoke",
                        "homogeneous", "escalate", "transport", "backend",
-                       "seed", "round_backend", "fused_kernels",
+                       "seed", "round_backend", "fused_kernels", "quire",
                        "devices", "workers"),
         "metric": "us_per_window",
     },

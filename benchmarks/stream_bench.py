@@ -26,6 +26,9 @@ per-format throughput (windows/sec) and model energy (nJ/window).
                                     --scaling-patients 32,64
                                                  # commit the device-count ×
                                                  # fleet-size scaling curve
+  python benchmarks/stream_bench.py --smoke --json --quire-ab --repeat 3
+                                                 # paired REPRO_QUIRE on/off
+                                                 # A/B (µs + nJ + accuracy)
 
 Output follows benchmarks/run.py conventions: ``name,us_per_call,derived``
 CSV rows, one per (task, format) group plus a fleet rollup.  ``--json``
@@ -182,14 +185,14 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
         homogeneous: bool = False, escalate: bool = False, seed: int = 0,
         json_path=None, forest=None, transport: str = "inproc",
         stall: int = 0, stall_timeout_s: float = 1.5,
-        pad_policy=None, fused=None, round_backend=None,
+        pad_policy=None, fused=None, round_backend=None, quire=None,
         devices: int = 0, workers: int = 0):
     """Build and stream the fleet; returns the machine-readable result doc
     (and writes it to ``json_path`` when given).
 
-    ``fused``/``round_backend`` override the backend selection for this
-    run only (the A/B harness alternates them); ``None`` keeps the
-    process-wide setting.  ``devices > 1`` shards every dispatch over a
+    ``fused``/``round_backend``/``quire`` override the backend selection
+    for this run only (the A/B harnesses alternate them); ``None`` keeps
+    the process-wide setting.  ``devices > 1`` shards every dispatch over a
     forced host device mesh (the caller must have set XLA_FLAGS before jax
     imported — ``main()`` does); ``workers > 1`` partitions the fleet
     across spawned worker processes instead (TCP transport only).
@@ -208,7 +211,7 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
         if escalate:
             raise ValueError("--escalate is per-engine state; not supported "
                              "across --workers yet")
-        if fused is not None or round_backend is not None:
+        if fused is not None or round_backend is not None or quire is not None:
             raise ValueError("A/B backend overrides do not cross the "
                              "worker-pool spawn boundary")
         return _run_workers(patients, windows, max_batch, smoke,
@@ -222,7 +225,7 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
 
     with backend_overrides(
             fused=None if fused is None else ("on" if fused else "off"),
-            round_backend=round_backend):
+            round_backend=round_backend, quire=quire):
         return _run_measured(patients, windows, max_batch, smoke,
                              homogeneous, escalate, seed, json_path, forest,
                              transport, stall, stall_timeout_s, pad_policy,
@@ -234,7 +237,8 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
                   stall_timeout_s, pad_policy, devices=0):
     import jax
 
-    from repro.core.arith import get_fused_kernels, get_round_backend
+    from repro.core.arith import (get_fused_kernels, get_quire,
+                                  get_round_backend)
     from repro.ingest import Supervisor
     from repro.stream import (EscalationPolicy, PrecisionRouter,
                               StreamEngine, cough_pipeline, rpeak_pipeline)
@@ -306,6 +310,7 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
                    "seed": seed, "backend": jax.default_backend(),
                    "round_backend": get_round_backend(),
                    "fused_kernels": "on" if get_fused_kernels() else "off",
+                   "quire": "on" if get_quire() else "off",
                    "transport": transport, "stall": stall,
                    "pad_strategy": engine.pad_strategy(),
                    "devices": max(1, devices), "workers": 1,
@@ -315,6 +320,7 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
                    "measured": "single_pass"},
         "groups": groups,
         "ab": None,             # filled by the --ab paired harness
+        "quire_ab": None,       # filled by the --quire-ab paired harness
         "smoke_baseline": None,  # filled by --smoke-baseline (CI perf gate)
         "scaling": None,        # filled by the --scaling curve harness
         "microbench": None,     # filled by --microbench
@@ -348,7 +354,8 @@ def _run_workers(patients, windows, max_batch, smoke, homogeneous, seed,
     per-worker telemetry merged into the standard doc shape."""
     import jax
 
-    from repro.core.arith import get_fused_kernels, get_round_backend
+    from repro.core.arith import (get_fused_kernels, get_quire,
+                                  get_round_backend)
     from repro.ingest.workers import run_worker_fleet
 
     sim = _build_simulator(patients, windows, not homogeneous, stall, seed)
@@ -377,12 +384,14 @@ def _run_workers(patients, windows, max_batch, smoke, homogeneous, seed,
                    "seed": seed, "backend": jax.default_backend(),
                    "round_backend": get_round_backend(),
                    "fused_kernels": "on" if get_fused_kernels() else "off",
+                   "quire": "on" if get_quire() else "off",
                    "transport": "tcp", "stall": stall,
                    "pad_strategy": pad_policy or "max",
                    "devices": max(1, devices), "workers": workers,
                    "measured": "worker_pool"},
         "groups": groups,
         "ab": None,
+        "quire_ab": None,
         "smoke_baseline": None,
         "scaling": None,
         "microbench": None,
@@ -537,6 +546,71 @@ def run_ab(arms, repeat, forest, **kwargs):
     return out
 
 
+def _quire_ab_inputs(forest, batch):
+    """The two acceptance sweeps: one real cough batch (posit16) and one
+    real ECG batch (posit8), each with its pipeline and the output key the
+    accuracy comparison reads."""
+    from repro.data.biosignals import cough_stream_signals, ecg_stream_signal
+    from repro.stream import cough_pipeline, rpeak_pipeline
+    from repro.stream.pipelines import RPEAK_WINDOW_S
+
+    cough = cough_pipeline(forest)
+    a, i, _ = cough_stream_signals(batch, seed=7)
+    ca = {"audio": a.reshape(a.shape[0], batch, -1).swapaxes(0, 1).copy(),
+          "imu": i.reshape(i.shape[0], batch, -1).swapaxes(0, 1).copy()}
+    rpeak = rpeak_pipeline()
+    s, _ = ecg_stream_signal(batch * RPEAK_WINDOW_S, seed=11)
+    ra = {"ecg": s.reshape(batch, 1, -1).copy()}
+    return [("cough", "posit16", cough, ca, "p_cough"),
+            ("rpeak", "posit8", rpeak, ra, "scores")]
+
+
+def run_quire_ab(forest, repeat=3, batch=16):
+    """Paired quire-on/off A/B on the acceptance sweeps (cough/posit16,
+    rpeak/posit8): µs/window of the warmed jitted window core, nJ/window
+    from the ledger pricing (QMADD…QROUND vs per-op rounding), and
+    accuracy as mean |output − fp32 reference| per arm — the
+    accuracy-per-nJ trade the quire exists to buy."""
+    import jax
+
+    from repro.core.arith import backend_overrides
+    from repro.stream.accounting import window_energy_nj
+
+    out = {"repeat": repeat, "batch": batch, "tasks": {}}
+    for task, fmt, pipe, arrays, key in _quire_ab_inputs(forest, batch):
+        with backend_overrides(quire="off"):
+            fn32 = pipe.make_fn("fp32")
+            ref = np.asarray(jax.block_until_ready(fn32(arrays))[key],
+                             dtype=np.float64)
+        row = {}
+        for arm in ("off", "on"):
+            print(f"# quire_ab {task}/{fmt} arm={arm}", file=sys.stderr)
+            with backend_overrides(quire=arm):
+                fn = pipe.make_fn(fmt)
+                got = jax.block_until_ready(fn(arrays))   # compile + warm
+                times = []
+                for _ in range(repeat):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(arrays))
+                    times.append(time.perf_counter() - t0)
+                err = float(np.mean(np.abs(
+                    np.asarray(got[key], dtype=np.float64) - ref)))
+                row[arm] = {
+                    "us_per_window": _median(times) * 1e6 / batch,
+                    "nj_per_window": window_energy_nj(
+                        pipe.ops_per_window, fmt, quire=(arm == "on")),
+                    "err_vs_fp32": err,
+                }
+        off, on = row["off"], row["on"]
+        row["us_ratio"] = (on["us_per_window"] / off["us_per_window"]
+                           if off["us_per_window"] else 0.0)
+        row["nj_ratio"] = (on["nj_per_window"] / off["nj_per_window"]
+                           if off["nj_per_window"] else 0.0)
+        row["err_delta"] = off["err_vs_fp32"] - on["err_vs_fp32"]
+        out["tasks"][f"{task}/{fmt}"] = row
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--patients", type=int, default=None,
@@ -604,6 +678,11 @@ def main():
                     help="additionally run a smoke-sized pass and embed "
                          "its fleet row as the CI perf-gate baseline "
                          "(benchmarks/check_perf.py)")
+    ap.add_argument("--quire-ab", action="store_true",
+                    help="paired REPRO_QUIRE on/off A/B on the acceptance "
+                         "sweeps (cough/posit16, rpeak/posit8): µs/window, "
+                         "nJ/window and accuracy vs fp32 per arm; lands in "
+                         "the JSON 'quire_ab' block")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     smoke_d, full_d = (8, 2, 8), (64, 4, 32)
@@ -616,9 +695,10 @@ def main():
         ap.error("--patients must be ≥ 2 (one cough + one ECG arm)")
     if args.ab and args.repeat < 1:
         ap.error("--repeat must be ≥ 1")
-    if (args.ab or args.smoke_baseline or args.scaling) and not args.json:
-        ap.error("--ab/--smoke-baseline/--scaling results only land in the "
-                 "JSON record: pass --json [PATH]")
+    if ((args.ab or args.smoke_baseline or args.scaling or args.quire_ab)
+            and not args.json):
+        ap.error("--ab/--smoke-baseline/--scaling/--quire-ab results only "
+                 "land in the JSON record: pass --json [PATH]")
     if args.workers > 1:
         if args.transport == "inproc":
             print("# --workers forces --transport tcp", file=sys.stderr)
@@ -636,7 +716,7 @@ def main():
             os.environ["XLA_FLAGS"] = (prev + " " + flag).strip()
 
     forest = None
-    if args.ab or args.smoke_baseline:
+    if args.ab or args.smoke_baseline or args.quire_ab:
         t0 = time.perf_counter()
         forest = build_forest()
         print(f"# forest trained in {time.perf_counter() - t0:.1f}s",
@@ -683,6 +763,8 @@ def main():
             entries.append({"config": sdoc["config"],
                             "fleet": sdoc["groups"]["fleet"]})
         doc["smoke_baseline"] = entries
+    if args.quire_ab:
+        doc["quire_ab"] = run_quire_ab(forest, repeat=args.repeat)
     if args.microbench:
         doc["microbench"] = run_microbench(devices=args.devices)
     if args.scaling:
@@ -746,6 +828,16 @@ def main():
             if ratio is not None:
                 row += f";ratio={ratio:.2f}"
             print(f"stream_bench/ab/{key},0,{row}")
+    if doc["quire_ab"]:
+        for key, t in doc["quire_ab"]["tasks"].items():
+            print(f"stream_bench/quire_ab/{key},0,"
+                  f"us_off={t['off']['us_per_window']:.0f};"
+                  f"us_on={t['on']['us_per_window']:.0f};"
+                  f"nj_off={t['off']['nj_per_window']:.1f};"
+                  f"nj_on={t['on']['nj_per_window']:.1f};"
+                  f"err_off={t['off']['err_vs_fp32']:.3e};"
+                  f"err_on={t['on']['err_vs_fp32']:.3e};"
+                  f"us_ratio={t['us_ratio']:.2f}")
 
 
 if __name__ == "__main__":

@@ -82,10 +82,24 @@ def get_fft_plan(n: int, fmt_name: str, dtype_name: str) -> FFTPlan:
     return FFTPlan(n, fmt_name, dtype_name)
 
 
+def _twiddle_mul(ar: Arith, o_re, o_im, wr, wi):
+    """The complex twiddle product ``t = w ⊗ o``.
+
+    Default: 4 mul + 2 add, each rounded (the seed butterfly).  Quire mode:
+    each component is ONE fused two-term accumulation — two QMADDs and a
+    single QROUND via ``Arith.fdot2`` (``−wi`` is exact: posit lattices are
+    symmetric under negation, so the pre-rounded twiddle negates in place).
+    """
+    if ar.quire:
+        return (ar.fdot2(wr, o_re, -wi, o_im),
+                ar.fdot2(wr, o_im, wi, o_re))
+    return (ar.sub(ar.mul(wr, o_re), ar.mul(wi, o_im)),
+            ar.add(ar.mul(wr, o_im), ar.mul(wi, o_re)))
+
+
 def _butterfly(ar: Arith, e_re, e_im, o_re, o_im, wr, wi):
-    """t = w ⊗ o (4 mul + 2 add, each rounded); u = e + t; v = e − t."""
-    t_re = ar.sub(ar.mul(wr, o_re), ar.mul(wi, o_im))
-    t_im = ar.add(ar.mul(wr, o_im), ar.mul(wi, o_re))
+    """t = w ⊗ o (rounded per ``_twiddle_mul``); u = e + t; v = e − t."""
+    t_re, t_im = _twiddle_mul(ar, o_re, o_im, wr, wi)
     u_re = ar.add(e_re, t_re)
     u_im = ar.add(e_im, t_im)
     v_re = ar.sub(e_re, t_re)
@@ -155,6 +169,17 @@ def _fused_stage(ar: Arith, z: jax.Array, wr_np: np.ndarray,
         e, o = z[..., : R // 2], z[..., R // 2:]
     else:
         e, o = z[..., : R // 2, :], z[..., R // 2:, :]
+    if ar.quire:
+        # quire arm: the twiddle join is two fused 2-term accumulations per
+        # output (one rounding each) instead of the 6-op rounded cmul — the
+        # same elementary ops in the same order as the unfused quire
+        # butterfly, so fused≡unfused bit-identity holds here too.  The
+        # Pallas butterfly kernel bakes in per-op rounding and is bypassed.
+        shp = (*([1] * nb), -1, 1) if tr else (*([1] * nb), 1, -1)
+        wr = jnp.asarray(wr_np).reshape(shp)
+        wi = jnp.asarray(wi_np).reshape(shp)
+        t = jnp.stack(_twiddle_mul(ar, o[0], o[1], wr, wi))
+        return ar.rnd(jnp.concatenate([e + t, e - t], axis=-2 if tr else -1))
     if get_round_backend() == "pallas":
         from repro.kernels.posit_round import posit_butterfly
         shp = (*([1] * nb), -1, 1) if tr else (*([1] * nb), 1, -1)
@@ -188,8 +213,11 @@ def _fused_final_rstage(ar: Arith, z: jax.Array, plan: FFTPlan
     wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
     e_re, o_re = z[0, ..., 0, :], z[0, ..., 1, :]
     e_im, o_im = z[1, ..., 0, :], z[1, ..., 1, :]
-    P = rnd(jnp.stack([wr * o_re, wi * o_im, wr * o_im, wi * o_re]))
-    t = rnd(jnp.stack([P[0] - P[1], P[2] + P[3]]))
+    if ar.quire:
+        t = jnp.stack(_twiddle_mul(ar, o_re, o_im, wr, wi))
+    else:
+        P = rnd(jnp.stack([wr * o_re, wi * o_im, wr * o_im, wi * o_re]))
+        t = rnd(jnp.stack([P[0] - P[1], P[2] + P[3]]))
     u = rnd(jnp.stack([e_re + t[0], e_im + t[1]]))
     ny = rnd(jnp.stack([e_re[..., :1] - t[0][..., :1],
                         e_im[..., :1] - t[1][..., :1]]))
@@ -368,8 +396,7 @@ def _rfft_unfused(ar: Arith, x: jax.Array, plan: FFTPlan
     wr, wi = jnp.asarray(wr_np), jnp.asarray(wi_np)
     e_re, o_re = zr[..., 0, :], zr[..., 1, :]
     e_im, o_im = zi[..., 0, :], zi[..., 1, :]
-    t_re = ar.sub(ar.mul(wr, o_re), ar.mul(wi, o_im))
-    t_im = ar.add(ar.mul(wr, o_im), ar.mul(wi, o_re))
+    t_re, t_im = _twiddle_mul(ar, o_re, o_im, wr, wi)
     u_re = ar.add(e_re, t_re)
     u_im = ar.add(e_im, t_im)
     ny_re = ar.sub(e_re[..., :1], t_re[..., :1])

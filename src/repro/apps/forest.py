@@ -100,7 +100,9 @@ def forest_predict(ar: Arith, forest: Forest, X: jax.Array) -> jax.Array:
         node = jnp.where(f < 0, node, nxt)
     probs = value[jnp.arange(T)[None], node]            # (B, T)
     # vote aggregation as a rounded matmul row: ×1 products are exact, so
-    # the posit corner is one quire accumulation rounded once and the IEEE
-    # corner the usual per-MAC chain — one kernel launch either way
+    # the posit corner is one wide accumulation rounded once (EXACT under
+    # REPRO_QUIRE=on — T tree votes fit any quire trivially, priced as
+    # 2T QMADDs + 1 QROUND in stream.accounting) and the IEEE corner the
+    # usual per-MAC chain — one kernel launch either way
     votes = ar.matmul(probs, jnp.ones((T, 1), probs.dtype))[..., 0]
     return ar.div(votes, float(T))

@@ -11,7 +11,7 @@ tests against the exact oracle on random vectors).
 The apps (FFT, MFCC, random forest, k-means, BayeSlope) are written against
 this interface, so a single ``--format`` flag sweeps every arithmetic.
 
-Two orthogonal switches control how the rounded ops are realized (the full
+Three orthogonal switches control how the rounded ops are realized (the full
 matrix is documented in ``repro/kernels/README.md``):
 
 * ``REPRO_ROUND_BACKEND`` — how a single posit rounding is computed
@@ -22,7 +22,15 @@ matrix is documented in ``repro/kernels/README.md``):
   retained element-per-step oracles.  Fused and unfused paths are
   bit-identical by construction (``tests/test_fused_backend.py``): fusion
   regroups the SAME elementary rounded ops, it never reassociates a wide
-  reduction.
+  reduction;
+* ``REPRO_QUIRE`` — whether posit reductions (``dot``/``sum``/``cumsum``/
+  ``matmul`` and the FFT twiddle joins in ``apps.dsp``) accumulate EXACTLY
+  (the paper's quire, realized with compensated error-free float summation
+  — ``core.quire``) with one rounding at the end, instead of rounding a
+  wide f32/f64 device sum.  Unlike the other two switches this one CHANGES
+  posit accumulation bits (that is its point); it is pinned bit-exact
+  against the ``quire_dot_exact`` Fractions oracle in
+  ``tests/test_quire_mode.py`` and priced in ``energy/model.py``.
 """
 from __future__ import annotations
 
@@ -37,6 +45,8 @@ import jax.numpy as jnp
 from .floatsim import round_to_float
 from .formats import FloatFormat, PositFormat, get_format
 from .posit import round_to_posit, round_to_posit_codec
+from .quire import (comp_cumsum, comp_dot, comp_sum, product_eft_needed,
+                    two_prod, two_sum)
 
 # -- posit rounding backend ---------------------------------------------------
 # "jnp"    — direct float-bit rounding in plain jnp (default off-TPU)
@@ -92,31 +102,64 @@ def get_fused_kernels() -> bool:
     return _fused_kernels != "off"
 
 
+# -- quire accumulation switch ------------------------------------------------
+# "on"   — posit reductions accumulate exactly (compensated EFT summation,
+#          ``core.quire``) with a SINGLE rounding at the end: the paper's
+#          16n-bit quire / Xposit QMADD...QROUND sequence.
+# "off"  — the seed contract: round one wide f32/f64 device sum, which is
+#          close to but not exact accumulation (the wide sum itself rounds
+#          per partial at accumulator precision).
+# "auto" — "off".  Quire mode deliberately changes posit accumulation bits,
+#          so every committed bit-identity baseline and benchmark was
+#          recorded with it off; it is the opt-in measurement arm, as on
+#          the real hardware (QMADD sequences are compiler-selected).
+_QUIRE_MODES = ("auto", "on", "off")
+_quire = os.environ.get("REPRO_QUIRE", "auto")
+
+
+def set_quire(name: str) -> None:
+    """Select quire-exact posit accumulation ("on") vs wide-sum ("off")."""
+    if name not in _QUIRE_MODES:
+        raise ValueError(f"quire mode {name!r} not in {_QUIRE_MODES}")
+    global _quire
+    _quire = name
+
+
+def get_quire() -> bool:
+    """The effective quire switch after resolving ``auto`` (→ off)."""
+    return _quire == "on"
+
+
 def fusion_cache_key() -> tuple:
     """Key component for jit caches whose traces bake in the backend
     selection — include it wherever a compiled fn is memoized so an A/B
-    toggle (``set_fused_kernels`` / ``set_round_backend``) retraces."""
-    return (get_round_backend(), get_fused_kernels())
+    toggle (``set_fused_kernels`` / ``set_round_backend`` / ``set_quire``)
+    retraces."""
+    return (get_round_backend(), get_fused_kernels(), get_quire())
 
 
 @contextlib.contextmanager
-def backend_overrides(fused: str = None, round_backend: str = None):
+def backend_overrides(fused: str = None, round_backend: str = None,
+                      quire: str = None):
     """Temporarily select backend realizations (the A/B harness's hook).
 
     Saves the RAW (unresolved) modes and restores them through the public
     setters on every exit path, so a bad override name can never leak a
     half-applied selection into process-global state.
     """
-    prev_fused, prev_rb = _fused_kernels, _round_backend
+    prev_fused, prev_rb, prev_q = _fused_kernels, _round_backend, _quire
     try:
         if fused is not None:
             set_fused_kernels(fused)
         if round_backend is not None:
             set_round_backend(round_backend)
+        if quire is not None:
+            set_quire(quire)
         yield
     finally:
         set_fused_kernels(prev_fused)
         set_round_backend(prev_rb)
+        set_quire(prev_q)
 
 
 def _round_posit_dispatch(x: jax.Array, fmt: PositFormat) -> jax.Array:
@@ -151,6 +194,18 @@ class Arith:
     def exact(self) -> bool:
         return isinstance(self.fmt, FloatFormat) and self.fmt.name == "fp32"
 
+    @property
+    def quire(self) -> bool:
+        """Quire-exact accumulation is live for this context.  Posit only:
+        IEEE formats have no quire (the paper's baselines round per MAC)
+        and fp32 reductions are already the wide reference."""
+        return self.is_posit and get_quire()
+
+    def _product_eft(self, dtype) -> bool:
+        """Products of this format's values can be inexact in ``dtype`` —
+        split them through ``two_prod`` on the quire paths (posit32/f64)."""
+        return product_eft_needed(self.fmt, dtype)
+
     # -- rounding ------------------------------------------------------------
     def rnd(self, x: jax.Array) -> jax.Array:
         x = jnp.asarray(x)
@@ -183,6 +238,27 @@ class Arith:
             from repro.kernels.posit_round import posit_fma_round
             return posit_fma_round(a, b, c, self.fmt)
         return self.rnd(a * b + c)
+
+    def fdot2(self, a, b, c, d):
+        """``rnd(a·b + c·d)`` — the FFT twiddle-join primitive.
+
+        Quire mode accumulates the two products EXACTLY (two QMADDs, one
+        QROUND: ``two_sum`` joins the products error-free, with ``two_prod``
+        splitting where a single product outruns the accumulator); otherwise
+        three elementary rounded ops (mul, mul, add), exactly the seed
+        butterfly's shape.
+        """
+        a, b, c, d = (jnp.asarray(v) for v in (a, b, c, d))
+        if self.quire:
+            dt = jnp.result_type(a, b, c, d)
+            if self._product_eft(dt):
+                p1, e1 = two_prod(a, b)
+                p2, e2 = two_prod(c, d)
+                s, e = two_sum(p1, p2)
+                return self.rnd(s + (e + (e1 + e2)))
+            s, e = two_sum(a * b, c * d)
+            return self.rnd(s + e)
+        return self.add(self.mul(a, b), self.mul(c, d))
 
     # -- transcendental (libm computes wide, result stored in format; the
     # paper's embedded port uses table-based trig, which likewise produces a
@@ -241,31 +317,55 @@ class Arith:
         acc, out = jax.lax.scan(step, acc0, moved)
         return out if keep_prefixes else acc
 
+    @staticmethod
+    def _flatten_if_axis_none(a, axis):
+        """``axis=None`` reductions ravel FIRST on every path (posit, fp32,
+        IEEE) so all arms reduce the same element order bit-consistently —
+        ``jnp.sum(axis=None)`` is free to pick a different reduction tree
+        than the raveled sum, and ``_ieee_accumulate`` cannot move a None
+        axis at all (the seed crash this normalization fixes)."""
+        if axis is None:
+            return a.reshape(-1), -1
+        return a, axis
+
     def dot(self, a, b, axis=-1):
-        """Quire-fused dot: inputs are format values, one rounding at the end.
+        """Dot with ONE rounding of a wide accumulation for posits/fp32
+        (EXACT accumulation under quire mode — ``core.quire``).
 
         For IEEE formats (which have no quire) the paper's baselines
         accumulate in the same format — reproduce that with the sequential
         rounded accumulation above.
         """
         a, b = jnp.asarray(a), jnp.asarray(b)
+        if self.quire:
+            s, c = comp_dot(a, b, axis=axis,
+                            product_eft=self._product_eft(
+                                jnp.result_type(a, b)))
+            return self.rnd(s + c)
         if self.is_posit or self.exact:
-            return self.rnd(jnp.sum(a * b, axis=axis))
+            prod, axis = self._flatten_if_axis_none(a * b, axis)
+            return self.rnd(jnp.sum(prod, axis=axis))
         # IEEE: round after every MAC (no fused accumulator available).
-        prod = self.rnd(a * b)
+        prod, axis = self._flatten_if_axis_none(self.rnd(a * b), axis)
         return self._ieee_accumulate(jnp.moveaxis(prod, axis, 0), False)
 
     def sum(self, a, axis=-1):
-        a = jnp.asarray(a)
+        a, axis = self._flatten_if_axis_none(jnp.asarray(a), axis)
+        if self.quire:
+            s, c = comp_sum(a, axis=axis)
+            return self.rnd(s + c)
         if self.is_posit or self.exact:
             return self.rnd(jnp.sum(a, axis=axis))
         return self._ieee_accumulate(jnp.moveaxis(a, axis, 0), False)
 
     def cumsum(self, a, axis=-1):
-        """Rounded prefix sums: for posits each prefix is one quire-fused
-        accumulation rounded once; IEEE rounds after every partial add,
-        mirroring ``sum``."""
-        a = jnp.asarray(a)
+        """Rounded prefix sums: for posits each prefix is one wide
+        accumulation rounded once (exact per prefix under quire mode);
+        IEEE rounds after every partial add, mirroring ``sum``."""
+        a, axis = self._flatten_if_axis_none(jnp.asarray(a), axis)
+        if self.quire:
+            s, c = comp_cumsum(a, axis=axis)
+            return self.rnd(s + c)
         if self.is_posit or self.exact:
             return self.rnd(jnp.cumsum(a, axis=axis))
         out = self._ieee_accumulate(jnp.moveaxis(a, axis, 0), True)
@@ -303,6 +403,15 @@ class Arith:
             for d in batch:
                 rows *= d
             a2 = a.reshape(rows, K)
+            if self.quire:
+                # quire mode: EXACT K-accumulation per output element via
+                # compensated products — bypasses both the device matmul
+                # and the Pallas tiled kernel (their wide f32 dots round
+                # per partial; the quire, by definition, does not).
+                s, c = comp_dot(a2[:, :, None], b[None, :, :], axis=1,
+                                product_eft=self._product_eft(
+                                    jnp.result_type(a2, b)))
+                return self.rnd(s + c).reshape(*batch, N)
             if (self.is_posit and get_round_backend() == "pallas"
                     and get_fused_kernels()):
                 from repro.kernels.posit_matmul import rounded_matmul

@@ -201,7 +201,8 @@ def aggregate_rollup(payloads: Sequence[Dict[str, object]]
             for k, v in row.items():
                 acc[k] += v
     groups: Dict[str, Dict[str, float]] = {}
-    tot = {"windows": 0, "energy_nj": 0.0, "latency_s": 0.0,
+    tot = {"windows": 0, "batches": 0, "padded_windows": 0,
+           "energy_nj": 0.0, "latency_s": 0.0,
            "escalated_windows": 0, "escalation_nj": 0.0}
     for key, g in sorted(raw.items()):
         groups[key] = {
@@ -218,8 +219,12 @@ def aggregate_rollup(payloads: Sequence[Dict[str, object]]
         }
         for k in tot:
             tot[k] += g[k]
+    # schema-complete fleet row: key-parity with every per-group row (and
+    # with EnergyLedger.summary()'s fleet row)
     groups["fleet"] = {
         "windows": tot["windows"],
+        "batches": tot["batches"],
+        "padded_windows": tot["padded_windows"],
         "windows_per_s": (tot["windows"] / tot["latency_s"]
                           if tot["latency_s"] else 0.0),
         "nj_per_window": (tot["energy_nj"] / tot["windows"]

@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Tuple
 
+from repro.core.arith import get_quire
 from repro.data.biosignals import AUDIO_SR, IMU_SR, WINDOW_S
 from repro.energy.model import OpCounts, estimate_app_energy_nj, fft_op_counts
 
@@ -26,12 +27,19 @@ def energy_config_for_format(fmt: str) -> str:
     return "coprosit" if fmt.startswith("posit") else "fpu_ss"
 
 
-def window_energy_nj(ops: OpCounts, fmt: str) -> float:
+def window_energy_nj(ops: OpCounts, fmt: str, quire: bool = None) -> float:
     """Model nJ for one window computed in ``fmt`` — corner selection plus
     posit-width-aware datapath power (``energy.model.power_total_uw``), so
-    an escalated posit8→posit16 window costs measurably more."""
-    return estimate_app_energy_nj(ops, energy_config_for_format(fmt),
-                                  fmt=fmt)
+    an escalated posit8→posit16 window costs measurably more.
+
+    ``quire=None`` reads the live ``REPRO_QUIRE`` switch, so the ledger
+    bills whatever mode actually computed the window.  Only the posit
+    corner has a quire; IEEE windows price identically in both modes."""
+    if quire is None:
+        quire = get_quire()
+    config = energy_config_for_format(fmt)
+    return estimate_app_energy_nj(ops, config, fmt=fmt,
+                                  quire=bool(quire) and config == "coprosit")
 
 
 def cough_window_op_counts(fft_n: int = 4096, n_mel: int = 20,
@@ -49,30 +57,45 @@ def cough_window_op_counts(fft_n: int = 4096, n_mel: int = 20,
     fft = fft_op_counts(fft_n)
     ops.add += audio_ch * fft.add
     ops.mul += audio_ch * fft.mul
-    # |X|² PSD: 2 mul + 1 add per bin
+    ops.quire_mac += audio_ch * fft.quire_mac       # twiddle cmuls fuse
+    ops.quire_round += audio_ch * fft.quire_round
+    # |X|² PSD: 2 mul + 1 add per bin (elementwise, not an accumulation —
+    # no quire attribution)
     ops.mul += audio_ch * 2 * bins
     ops.add += audio_ch * bins
     # spectral stats: rolloff prefix sums (whose last prefix IS the total)
-    # + centroid MAC + 4 band sums ≈ 3 add passes + 1 mul pass
+    # + centroid MAC + 4 band sums ≈ 3 add passes + 1 mul pass.  All four
+    # are quire accumulations; the cumsum's every prefix pays its own
+    # QROUND (no net rounding saving there — an honest column).
     ops.add += audio_ch * 3 * bins
     ops.mul += audio_ch * bins
     ops.div += audio_ch * 6
-    # MFCC: mel filterbank MACs + log + DCT MACs
+    ops.quire_mac += audio_ch * 4 * bins
+    ops.quire_round += audio_ch * (bins + 1 + 4)
+    # MFCC: mel filterbank MACs + log + DCT MACs — every MAC in the quire,
+    # one QROUND per output row
     mac = n_mel * bins + n_coef * n_mel
     ops.mul += audio_ch * mac
     ops.add += audio_ch * mac
     ops.conv += audio_ch * n_mel          # table-based log
-    # IMU time-domain features (zcr/kurtosis/rms) ≈ 7 ops/sample
+    ops.quire_mac += audio_ch * 2 * mac
+    ops.quire_round += audio_ch * (n_mel + n_coef)
+    # IMU time-domain features (zcr/kurtosis/rms) ≈ 7 ops/sample; the 4
+    # accumulation adds per sample feed 5 means per channel
     n_imu = int(round(IMU_SR * WINDOW_S))
     ops.add += imu_ch * n_imu * 4
     ops.mul += imu_ch * n_imu * 3
     ops.div += imu_ch * 6
     ops.sqrt += imu_ch
+    ops.quire_mac += imu_ch * n_imu * 4
+    ops.quire_round += imu_ch * 5
     # forest vote aggregation: one MAC per tree (tree walks are gathers +
     # int compares), mean division
     ops.add += n_trees
     ops.mul += n_trees
     ops.div += 1
+    ops.quire_mac += 2 * n_trees
+    ops.quire_round += 1
     # ingest conversions: every sample the window core CONSUMES enters the
     # storage format once — audio is cropped to the FFT size before the
     # ingest rounding, so the cropped tail never touches the datapath
@@ -81,12 +104,20 @@ def cough_window_op_counts(fft_n: int = 4096, n_mel: int = 20,
 
 
 def rpeak_window_op_counts(n: int, k_integration: int = 25) -> OpCounts:
-    """Arithmetic ops for one n-sample ECG window (BayeSlope stages 1–2)."""
+    """Arithmetic ops for one n-sample ECG window (BayeSlope stages 1–2).
+
+    Quire columns: only the GLF normalization's mean over the window is an
+    ``Arith`` accumulation (n adds, one QROUND); the k-tap moving
+    integration is an elementwise shifted-add chain, which the quire does
+    not fuse.
+    """
     ops = OpCounts()
     ops.add += (k_integration + 3) * n    # moving integration + GLF adds
     ops.mul += n                          # slope products
     ops.div += 3 * n + 2                  # pre-scale, normalize, logistic
     ops.conv += 2 * n                     # exp table + sample ingest
+    ops.quire_mac += n
+    ops.quire_round += 1
     return ops
 
 
@@ -193,6 +224,7 @@ class EnergyLedger:
         """{"task/fmt": {...}} plus a "fleet" rollup row."""
         out: Dict[str, Dict[str, float]] = {}
         tot_w, tot_e, tot_t = 0, 0.0, 0.0
+        tot_b, tot_p = 0, 0
         tot_esc_w, tot_esc_e = 0, 0.0
         for (task, fmt), g in sorted(self.stats.items()):
             out[f"{task}/{fmt}"] = {
@@ -208,10 +240,16 @@ class EnergyLedger:
             tot_w += g.windows
             tot_e += g.energy_nj
             tot_t += g.latency_s
+            tot_b += g.batches
+            tot_p += g.padded_windows
             tot_esc_w += g.escalated_windows
             tot_esc_e += g.escalation_nj
+        # schema-complete fleet row: same keys as every per-group row, so
+        # consumers (aggregate_rollup, check_perf) never special-case it
         out["fleet"] = {
             "windows": tot_w,
+            "batches": tot_b,
+            "padded_windows": tot_p,
             "windows_per_s": tot_w / tot_t if tot_t else 0.0,
             "nj_per_window": tot_e / tot_w if tot_w else 0.0,
             "total_nj": tot_e,

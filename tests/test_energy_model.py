@@ -31,6 +31,42 @@ def test_fft_op_counts_structure():
     bf = (4096 // 2) * 12
     assert ops.add == 6 * bf and ops.mul == 4 * bf
     assert ops.total() == 10 * bf
+    # quire attribution rides alongside without touching the base count:
+    # the twiddle cmul is 6 QMADDs + 2 QROUNDs per butterfly
+    assert ops.quire_mac == 6 * bf and ops.quire_round == 2 * bf
+
+
+def test_default_overhead_factor_derives_from_fft_op_counts():
+    """Calibration and billing share one op counter: the default overhead
+    factor must be EXACTLY measured-cycles / fft_op_counts(4096).total()
+    (the seed hard-coded a 12-ops/butterfly denominator — a silent 20%
+    drift against the 10-ops/butterfly counter that bills every window)."""
+    f = em.default_overhead_factor()
+    assert f * em.fft_op_counts(4096).total() == em.FFT_CYCLES["coprosit"]
+    ops = em.OpCounts(add=100, mul=50)
+    assert em.estimate_app_energy_nj(ops) == \
+        em.estimate_app_energy_nj(ops, overhead_factor=f)
+    # round-trip: billing the calibration workload at the default factor
+    # reproduces the paper's measured FFT energy exactly
+    assert em.estimate_app_energy_nj(em.fft_op_counts(4096)) == \
+        pytest.approx(em.fft_energy_nj("coprosit"), rel=1e-12)
+
+
+def test_quire_pricing_trades_rounding_stage_for_qrounds():
+    """quire=True subtracts one raw rounding-stage cycle per QMADD and adds
+    overhead-multiplied QROUND conversions; with no quire columns it is a
+    no-op."""
+    plain = em.OpCounts(add=100, mul=50)
+    assert em.estimate_app_energy_nj(plain, quire=True) == \
+        em.estimate_app_energy_nj(plain)
+    ops = em.OpCounts(add=100, mul=50, quire_mac=120, quire_round=4)
+    f = em.default_overhead_factor()
+    cycles_off = ops.total() * f
+    cycles_on = (cycles_off + ops.quire_round * f
+                 - em.QUIRE_ROUND_STAGE_CYCLES * ops.quire_mac)
+    ratio = em.estimate_app_energy_nj(ops, quire=True) / \
+        em.estimate_app_energy_nj(ops)
+    assert ratio == pytest.approx(cycles_on / cycles_off, rel=1e-12)
 
 
 def test_estimate_app_energy_scales_with_ops_and_corner():

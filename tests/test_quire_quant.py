@@ -27,9 +27,16 @@ def test_quire_exact_vs_f32_accumulation(seed):
     b_bits = np.asarray(encode(jnp.asarray(b), POSIT16))
     exact_pat = quire_dot_exact(a_bits, b_bits, POSIT16)
     exact_val = float(decode_scalar(exact_pat, POSIT16))
+    # the raw accumulator value sits within one posit16 ULP of the rounded
+    # oracle (the gap is the FORMAT's final rounding, not accumulator drift) …
     approx = float(qdot(jnp.asarray(a_bits), jnp.asarray(b_bits), POSIT16))
-    # f32 accumulation of 16 posit16 products is within one-ULP-ish
     assert abs(approx - exact_val) <= max(1e-5, 2e-3 * abs(exact_val))
+    # … and rounded back to posit16 it IS the oracle, bit for bit (the
+    # full per-format sweep lives in tests/test_quire_mode.py)
+    mask = (1 << POSIT16.n) - 1
+    got = int(np.asarray(qdot(jnp.asarray(a_bits), jnp.asarray(b_bits),
+                              POSIT16, out_format=POSIT16))) & mask
+    assert got == exact_pat & mask
 
 
 def test_quire_beats_per_op_rounding():

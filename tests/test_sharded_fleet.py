@@ -123,6 +123,10 @@ def test_aggregate_rollup_sums_rows_and_concatenates_latency():
     assert g["windows_per_s"] == 8 / 4.0
     fleet = out["groups"]["fleet"]
     assert fleet["windows"] == 8 and fleet["total_nj"] == 200.0
+    # rollup fleet row carries the SAME keys as every per-group row
+    # (batches/padded_windows included) — parity with EnergyLedger.summary
+    assert set(fleet) == set(g)
+    assert fleet["batches"] == 4 and fleet["padded_windows"] == 2
     # percentiles come from the CONCATENATED samples, never averaged
     # per-worker percentiles: the p50 of [1,1,1,100] ms is 1 ms
     assert out["latency_ms"]["p50"] == pytest.approx(1.0)

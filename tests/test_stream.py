@@ -127,6 +127,10 @@ def test_energy_ledger_accounting():
     assert s["fleet"]["windows"] == 10
     assert s["fleet"]["total_nj"] == pytest.approx(
         g["total_nj"] + s["cough/fp16"]["total_nj"])
+    # schema-complete fleet row: identical keys to every task row (batches
+    # and padded_windows included), so rollup consumers never special-case
+    assert set(s["fleet"]) == set(g)
+    assert s["fleet"]["batches"] == 3 and s["fleet"]["padded_windows"] == 2
 
 
 # ---------------------------------------------------------------------------
@@ -314,6 +318,16 @@ def test_stream_bench_json_schema_matches_committed(forest, tmp_path):
     # emit the keys as None placeholders
     assert doc["ab"] is None and doc["smoke_baseline"] is None
     assert doc["scaling"] is None and doc["microbench"] is None
+    assert doc["quire_ab"] is None
+    # the quire A/B block: both acceptance sweeps, each with on/off arms
+    # carrying timing + model energy + accuracy-vs-fp32 and the ratios
+    qab = committed["quire_ab"]
+    assert {"cough/posit16", "rpeak/posit8"} <= set(qab["tasks"])
+    for t in qab["tasks"].values():
+        assert set(t) == {"off", "on", "us_ratio", "nj_ratio", "err_delta"}
+        for arm in ("off", "on"):
+            assert set(t[arm]) == {"us_per_window", "nj_per_window",
+                                   "err_vs_fp32"}
     ab = committed["ab"]
     assert set(ab) >= {"arms", "repeat", "ratio"}
     assert {"fused", "unfused"} <= set(ab["arms"])
