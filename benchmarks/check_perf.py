@@ -18,6 +18,15 @@ gated metric regresses more than ``--max-regress`` (default 25%).
 Improvements always pass; a note is printed either way so the CI log
 shows the trajectory.
 
+For the ``stream`` family the gate additionally checks the telemetry
+plane's cost: the ``obs_ab`` block (recorded by ``stream_bench --json
+--obs-ab``, paired alternating runs with the metrics registry + tracer
+armed vs the null registry) must show an on/off fleet µs/window ratio of
+at most ``1 + --obs-max`` (default 3%) — instrumentation is only allowed
+to exist because it is nearly free.  The current run's block is gated
+when present, else the committed baseline's; a record with neither is
+noted but passes (the overhead evidence then simply isn't being tracked).
+
 Scope caveat: smoke runs skip the warmup pass, so the gated number is
 dominated by jit compile time (hundreds of ms/window vs ~0.3 warm).  The
 gate therefore primarily catches compile-time blowups, import-time
@@ -36,12 +45,12 @@ import sys
 # anything, and the gated fleet metric
 BENCHMARKS = {
     "stream": {
-        # devices/workers are part of the key: a sharded or worker-pool
-        # record must never gate against a single-device baseline
+        # devices/workers/obs are part of the key: a sharded, worker-pool
+        # or tracer-armed record must never gate against a plain baseline
         "comparable": ("patients", "windows", "max_batch", "smoke",
                        "homogeneous", "escalate", "transport", "backend",
                        "seed", "round_backend", "fused_kernels", "quire",
-                       "devices", "workers"),
+                       "devices", "workers", "obs"),
         "metric": "us_per_window",
     },
     "serve": {
@@ -65,6 +74,10 @@ def main():
                     help="record family / gated metric (default stream)")
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="allowed fractional slowdown (default 0.25)")
+    ap.add_argument("--obs-max", type=float, default=0.03,
+                    help="allowed telemetry-plane overhead: the obs_ab "
+                         "on/off fleet µs/window ratio may not exceed "
+                         "1 + this (stream family; default 0.03)")
     args = ap.parse_args()
     spec = BENCHMARKS[args.benchmark]
 
@@ -111,6 +124,22 @@ def main():
           f"[{verdict}]")
     if change > args.max_regress:
         sys.exit(1)
+
+    if args.benchmark == "stream":
+        # telemetry-plane overhead gate: prefer freshly-measured evidence,
+        # fall back to the committed record's paired A/B
+        oab = cur.get("obs_ab") or base_doc.get("obs_ab")
+        if not oab:
+            print("obs-overhead: no obs_ab block in either record "
+                  "(stream_bench --json --obs-ab) — not gated")
+            return
+        ratio = oab["ratio"]
+        limit = 1.0 + args.obs_max
+        verdict = "REGRESSION" if ratio > limit else "ok"
+        print(f"obs-overhead fleet us_per_window on/off ratio: "
+              f"{ratio:.3f} (gate {limit:.2f}) [{verdict}]")
+        if ratio > limit:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -29,6 +29,14 @@ per-format throughput (windows/sec) and model energy (nJ/window).
   python benchmarks/stream_bench.py --smoke --json --quire-ab --repeat 3
                                                  # paired REPRO_QUIRE on/off
                                                  # A/B (µs + nJ + accuracy)
+  python benchmarks/stream_bench.py --smoke --trace trace.json
+                                                 # export the measured pass
+                                                 # as Chrome trace-event
+                                                 # JSON (open in Perfetto)
+  python benchmarks/stream_bench.py --smoke --json --obs-ab --repeat 3
+                                                 # telemetry-plane on/off
+                                                 # overhead A/B (CI-gated
+                                                 # at a few percent)
 
 Output follows benchmarks/run.py conventions: ``name,us_per_call,derived``
 CSV rows, one per (task, format) group plus a fleet rollup.  ``--json``
@@ -186,7 +194,7 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
         json_path=None, forest=None, transport: str = "inproc",
         stall: int = 0, stall_timeout_s: float = 1.5,
         pad_policy=None, fused=None, round_backend=None, quire=None,
-        devices: int = 0, workers: int = 0):
+        devices: int = 0, workers: int = 0, obs=None, trace_path=None):
     """Build and stream the fleet; returns the machine-readable result doc
     (and writes it to ``json_path`` when given).
 
@@ -196,9 +204,18 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
     forced host device mesh (the caller must have set XLA_FLAGS before jax
     imported — ``main()`` does); ``workers > 1`` partitions the fleet
     across spawned worker processes instead (TCP transport only).
+
+    ``obs`` selects the telemetry plane for this run: ``None`` keeps the
+    engine default (a live metrics registry, no tracer), ``"on"`` arms the
+    registry AND a span tracer, ``"off"`` installs the null registry so
+    every instrument call is a no-op — the ``--obs-ab`` overhead gate
+    alternates "on"/"off".  ``trace_path`` exports the measured pass's
+    spans as Chrome trace-event JSON (implies a tracer).
     """
     from repro.core.arith import backend_overrides
 
+    if obs not in (None, "on", "off"):
+        raise ValueError(f"unknown obs mode {obs!r} (None, 'on' or 'off')")
     if transport not in ("inproc", "loopback", "tcp"):
         raise ValueError(f"unknown transport {transport!r}")
     if stall and transport == "inproc":
@@ -214,6 +231,10 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
         if fused is not None or round_backend is not None or quire is not None:
             raise ValueError("A/B backend overrides do not cross the "
                              "worker-pool spawn boundary")
+        if obs is not None or trace_path:
+            raise ValueError("--trace/--obs-ab run in-process; worker-pool "
+                             "telemetry is the per-worker metrics snapshot "
+                             "rollup (and --scrape on the workers)")
         return _run_workers(patients, windows, max_batch, smoke,
                             homogeneous, seed, json_path, stall,
                             stall_timeout_s, pad_policy, devices, workers)
@@ -229,20 +250,24 @@ def run(patients: int, windows: int, max_batch: int, smoke: bool = False,
         return _run_measured(patients, windows, max_batch, smoke,
                              homogeneous, escalate, seed, json_path, forest,
                              transport, stall, stall_timeout_s, pad_policy,
-                             devices)
+                             devices, obs, trace_path)
 
 
 def _run_measured(patients, windows, max_batch, smoke, homogeneous,
                   escalate, seed, json_path, forest, transport, stall,
-                  stall_timeout_s, pad_policy, devices=0):
+                  stall_timeout_s, pad_policy, devices=0, obs=None,
+                  trace_path=None):
     import jax
 
     from repro.core.arith import (get_fused_kernels, get_quire,
                                   get_round_backend)
     from repro.ingest import Supervisor
+    from repro.obs import NULL_METRICS, Tracer
     from repro.stream import (EscalationPolicy, PrecisionRouter,
                               StreamEngine, cough_pipeline, rpeak_pipeline)
 
+    metrics = NULL_METRICS if obs == "off" else None   # None = live default
+    tracer = Tracer() if (obs == "on" or trace_path) else None
     rng = np.random.default_rng(seed)
     mixed = not homogeneous
     sim = None
@@ -264,7 +289,8 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
                           max_batch=max_batch,
                           # one compiled shape per arm unless overridden
                           pad_policy=pad_policy or "max",
-                          mesh_info=mesh_info)
+                          mesh_info=mesh_info,
+                          metrics=metrics, tracer=tracer)
     supervisor = Supervisor(engine, capacity=4096)
 
     if not smoke:  # warm the compile caches, then measure steady state
@@ -278,6 +304,8 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
         print(f"# warmup pass in {time.perf_counter() - t0:.1f}s "
               f"(pad strategy: {engine.pad_strategy()})", file=sys.stderr)
         engine.reset()
+        if tracer is not None:
+            tracer.reset()   # the exported trace covers the measured pass
         supervisor = Supervisor(engine, capacity=4096)
 
     t0 = time.perf_counter()
@@ -314,12 +342,14 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
                    "transport": transport, "stall": stall,
                    "pad_strategy": engine.pad_strategy(),
                    "devices": max(1, devices), "workers": 1,
+                   "obs": obs or "default",
                    # wall-clock provenance of the groups' timing columns:
                    # a single measured pass, unless the --ab harness
                    # overrides them with its fused-arm medians
                    "measured": "single_pass"},
         "groups": groups,
         "ab": None,             # filled by the --ab paired harness
+        "obs_ab": None,         # filled by the --obs-ab overhead harness
         "quire_ab": None,       # filled by the --quire-ab paired harness
         "smoke_baseline": None,  # filled by --smoke-baseline (CI perf gate)
         "scaling": None,        # filled by the --scaling curve harness
@@ -341,6 +371,11 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
         "wall": {"elapsed_s": wall, "windows": n,
                  "end_to_end_windows_per_s": n / wall},
     }
+    if trace_path:
+        tracer.export(trace_path)
+        print(f"# wrote {trace_path} ({len(tracer)} spans, "
+              f"{len(tracer.categories())} categories, "
+              f"{tracer.dropped} dropped)", file=sys.stderr)
     if json_path:
         write_json(doc, json_path)
     return doc
@@ -388,9 +423,11 @@ def _run_workers(patients, windows, max_batch, smoke, homogeneous, seed,
                    "transport": "tcp", "stall": stall,
                    "pad_strategy": pad_policy or "max",
                    "devices": max(1, devices), "workers": workers,
+                   "obs": "default",
                    "measured": "worker_pool"},
         "groups": groups,
         "ab": None,
+        "obs_ab": None,
         "quire_ab": None,
         "smoke_baseline": None,
         "scaling": None,
@@ -546,6 +583,39 @@ def run_ab(arms, repeat, forest, **kwargs):
     return out
 
 
+def run_obs_ab(repeat, forest, **kwargs):
+    """Paired observability-overhead A/B: ``repeat`` alternating full runs
+    with the telemetry plane armed ("on": live registry + span tracer)
+    versus disabled ("off": null registry, no tracer), fleet-row medians
+    and the on/off µs/window ratio — the number the check_perf overhead
+    gate reads (instrumentation must stay within a few percent of free)."""
+    if repeat < 1:
+        raise ValueError(f"--repeat must be >= 1, got {repeat}")
+    passes = {"on": [], "off": []}
+    for r in range(repeat):
+        # alternate the start arm so monotonic machine drift (thermal
+        # ramp, page-cache warmup) doesn't systematically favour one
+        order = ("on", "off") if r % 2 == 0 else ("off", "on")
+        for arm in order:
+            print(f"# obs_ab pass {r + 1}/{repeat} arm={arm}",
+                  file=sys.stderr)
+            doc = run(forest=forest, obs=arm, **kwargs)
+            passes[arm].append(doc)
+    out = {"repeat": repeat, "arms": {}}
+    for arm, docs in passes.items():
+        out["arms"][arm] = {
+            "fleet_us_per_window": _median(
+                [d["groups"]["fleet"]["us_per_window"] for d in docs]),
+            "fleet_windows_per_s": _median(
+                [d["groups"]["fleet"]["windows_per_s"] for d in docs]),
+            "wall_s": _median([d["wall"]["elapsed_s"] for d in docs]),
+        }
+    off_us = out["arms"]["off"]["fleet_us_per_window"]
+    out["ratio"] = (out["arms"]["on"]["fleet_us_per_window"] / off_us
+                    if off_us else 0.0)
+    return out
+
+
 def _quire_ab_inputs(forest, batch):
     """The two acceptance sweeps: one real cough batch (posit16) and one
     real ECG batch (posit8), each with its pipeline and the output key the
@@ -683,6 +753,15 @@ def main():
                          "sweeps (cough/posit16, rpeak/posit8): µs/window, "
                          "nJ/window and accuracy vs fp32 per arm; lands in "
                          "the JSON 'quire_ab' block")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the measured pass's spans as Chrome "
+                         "trace-event JSON (opens in Perfetto / "
+                         "chrome://tracing); in-process runs only")
+    ap.add_argument("--obs-ab", action="store_true",
+                    help="paired telemetry-plane on/off A/B (live registry "
+                         "+ tracer vs null registry): fleet medians and "
+                         "the overhead ratio land in the JSON 'obs_ab' "
+                         "block (benchmarks/check_perf.py gates it)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     smoke_d, full_d = (8, 2, 8), (64, 4, 32)
@@ -695,10 +774,10 @@ def main():
         ap.error("--patients must be ≥ 2 (one cough + one ECG arm)")
     if args.ab and args.repeat < 1:
         ap.error("--repeat must be ≥ 1")
-    if ((args.ab or args.smoke_baseline or args.scaling or args.quire_ab)
-            and not args.json):
-        ap.error("--ab/--smoke-baseline/--scaling/--quire-ab results only "
-                 "land in the JSON record: pass --json [PATH]")
+    if ((args.ab or args.smoke_baseline or args.scaling or args.quire_ab
+            or args.obs_ab) and not args.json):
+        ap.error("--ab/--smoke-baseline/--scaling/--quire-ab/--obs-ab "
+                 "results only land in the JSON record: pass --json [PATH]")
     if args.workers > 1:
         if args.transport == "inproc":
             print("# --workers forces --transport tcp", file=sys.stderr)
@@ -706,6 +785,9 @@ def main():
         if args.ab:
             ap.error("--ab backend overrides cannot cross the worker-pool "
                      "spawn boundary")
+        if args.trace or args.obs_ab:
+            ap.error("--trace/--obs-ab run in-process; worker-pool "
+                     "telemetry is the per-worker metrics snapshot rollup")
     if args.devices > 1:
         # the forced host device split must land in the environment before
         # the FIRST jax import in this process (forest training below
@@ -716,7 +798,7 @@ def main():
             os.environ["XLA_FLAGS"] = (prev + " " + flag).strip()
 
     forest = None
-    if args.ab or args.smoke_baseline or args.quire_ab:
+    if args.ab or args.smoke_baseline or args.quire_ab or args.obs_ab:
         t0 = time.perf_counter()
         forest = build_forest()
         print(f"# forest trained in {time.perf_counter() - t0:.1f}s",
@@ -728,7 +810,7 @@ def main():
                   stall_timeout_s=args.stall_timeout,
                   pad_policy=args.pad_policy,
                   devices=args.devices, workers=args.workers)
-    doc = run(forest=forest, **kwargs)
+    doc = run(forest=forest, trace_path=args.trace, **kwargs)
     if args.ab:
         doc["ab"] = run_ab(args.ab.split(","), args.repeat, forest,
                            **kwargs)
@@ -763,6 +845,8 @@ def main():
             entries.append({"config": sdoc["config"],
                             "fleet": sdoc["groups"]["fleet"]})
         doc["smoke_baseline"] = entries
+    if args.obs_ab:
+        doc["obs_ab"] = run_obs_ab(args.repeat, forest, **kwargs)
     if args.quire_ab:
         doc["quire_ab"] = run_quire_ab(forest, repeat=args.repeat)
     if args.microbench:
@@ -828,6 +912,12 @@ def main():
             if ratio is not None:
                 row += f";ratio={ratio:.2f}"
             print(f"stream_bench/ab/{key},0,{row}")
+    if doc["obs_ab"]:
+        oab = doc["obs_ab"]
+        print(f"stream_bench/obs_ab,0,"
+              f"on={oab['arms']['on']['fleet_us_per_window']:.0f};"
+              f"off={oab['arms']['off']['fleet_us_per_window']:.0f};"
+              f"ratio={oab['ratio']:.3f}")
     if doc["quire_ab"]:
         for key, t in doc["quire_ab"]["tasks"].items():
             print(f"stream_bench/quire_ab/{key},0,"

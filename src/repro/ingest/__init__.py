@@ -10,9 +10,9 @@ evicts stalled patients on a timeout (``sessions``), a bounded-queue result
 supervisor publishing per-patient telemetry (``supervisor``), and a fleet
 replay client for soak runs and parity tests (``simulator``).
 """
-from .protocol import (BYE, DATA, HELLO, Frame, FrameDecoder, ProtocolError,
-                       bye, data, decode_body, encode_frame, encode_stream,
-                       hello, loopback)
+from .protocol import (BYE, DATA, EVICTED, HELLO, Frame, FrameDecoder,
+                       ProtocolError, bye, data, decode_body, encode_frame,
+                       encode_stream, evicted, hello, loopback)
 from .server import IngestServer
 from .sessions import ModalityState, PatientSession, SessionManager
 from .simulator import FleetSimulator, PatientPlan
@@ -21,10 +21,10 @@ from .workers import (WorkerConfig, aggregate_rollup, partition_plans,
                       run_worker_fleet)
 
 __all__ = [
-    "BYE", "DATA", "HELLO", "FleetSimulator", "Frame", "FrameDecoder",
-    "IngestServer", "ModalityState", "PatientPlan", "PatientSession",
-    "ProtocolError", "SessionManager", "Supervisor", "WorkerConfig",
-    "aggregate_rollup", "bye", "data", "decode_body", "encode_frame",
-    "encode_stream", "hello", "loopback", "partition_plans",
-    "run_worker_fleet",
+    "BYE", "DATA", "EVICTED", "HELLO", "FleetSimulator", "Frame",
+    "FrameDecoder", "IngestServer", "ModalityState", "PatientPlan",
+    "PatientSession", "ProtocolError", "SessionManager", "Supervisor",
+    "WorkerConfig", "aggregate_rollup", "bye", "data", "decode_body",
+    "encode_frame", "encode_stream", "evicted", "hello", "loopback",
+    "partition_plans", "run_worker_fleet",
 ]

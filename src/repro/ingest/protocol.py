@@ -9,12 +9,13 @@ resume on a fresh connection mid-stream.  Layout, all fields big-endian:
     body:
       2s   magic  = b"PH"
       u8   version = 1
-      u8   frame type (HELLO=1, DATA=2, BYE=3)
+      u8   frame type (HELLO=1, DATA=2, BYE=3, EVICTED=4)
       str  patient                (u8 length + utf-8 bytes)
       str  task
-      str  modality               ("" for HELLO/BYE)
+      str  modality               ("" for HELLO/BYE; the close REASON for
+                                   EVICTED — "stall" or "bye")
       u32  seq                    (per-(patient, modality) sample-frame
-                                   counter; 0 for HELLO/BYE)
+                                   counter; 0 for HELLO/BYE/EVICTED)
       u8   channels
       u8   dtype code             (0 = float32, 1 = float64)
       u32  n_samples
@@ -24,7 +25,11 @@ resume on a fresh connection mid-stream.  Layout, all fields big-endian:
 ``HELLO`` opens (or re-opens, after a disconnect) a patient session; ``BYE``
 declares a clean end of stream, letting the server finalize the patient's
 tracker immediately instead of waiting for the stall reaper.  ``DATA``
-carries one in-order chunk of one modality.  The decoder is incremental —
+carries one in-order chunk of one modality.  ``EVICTED`` is the one
+server→client frame: an explicit close notice carrying the reason
+("stall" or "bye") in the modality field, so a client that was silently
+reaped learns it must re-HELLO rather than keep streaming into a dead
+session.  The decoder is incremental —
 feed it arbitrary byte splits (the TCP reader does) and it yields every
 complete frame — and validates magic, version, CRC, and a frame-size bound
 before any payload is materialized.
@@ -48,7 +53,9 @@ VERSION = 1
 HELLO = 1
 DATA = 2
 BYE = 3
-_TYPES = (HELLO, DATA, BYE)
+EVICTED = 4     # server → client: session closed (stall eviction or BYE
+                # acknowledgment); the reason string rides the modality field
+_TYPES = (HELLO, DATA, BYE, EVICTED)
 
 # corrupt length prefixes must not allocate gigabytes: one frame is bounded
 # by a few seconds of the densest modality (16 kHz × 2ch float64 ≈ 256 KiB/s)
@@ -83,6 +90,13 @@ def hello(patient: str, task: str) -> Frame:
 
 def bye(patient: str, task: str) -> Frame:
     return Frame(BYE, patient, task)
+
+
+def evicted(patient: str, task: str, reason: str) -> Frame:
+    """Server-originated close notice (the only downstream frame): tells
+    the client WHY its session ended — ``"stall"`` (reaper timeout) or
+    ``"bye"`` (clean-close acknowledgment)."""
+    return Frame(EVICTED, patient, task, reason)
 
 
 def data(patient: str, task: str, modality: str, seq: int,

@@ -21,11 +21,21 @@ got a turn.
 A periodic reaper task applies the ``SessionManager`` stall-timeout
 eviction policy, so dead radios release their staged state without any
 client cooperation.
+
+The server is also where the telemetry plane attaches: ``scrape_port``
+(``None`` = off, ``0`` = ephemeral) starts a localhost HTTP endpoint on
+the same event loop serving ``/metrics`` (Prometheus text from the
+engine's registry) and ``/telemetry`` (the supervisor's JSON view) —
+see ``repro.obs.scrape``.  Each connection registers itself as its
+patients' downstream sender, so ``SessionManager`` can deliver EVICTED
+close notices back to the client that streamed the session.
 """
 from __future__ import annotations
 
 import asyncio
 from typing import Optional
+
+from repro.obs import ScrapeServer
 
 from .protocol import FrameDecoder, ProtocolError
 from .sessions import SessionManager
@@ -35,10 +45,17 @@ class IngestServer:
     def __init__(self, sessions: SessionManager, host: str = "127.0.0.1",
                  port: int = 0, high_watermark: int = 4096,
                  reap_interval_s: Optional[float] = None,
-                 read_bytes: int = 1 << 16, max_suspend_s: float = 1.0):
+                 read_bytes: int = 1 << 16, max_suspend_s: float = 1.0,
+                 supervisor=None, scrape_port: Optional[int] = None):
         """``port=0`` binds an ephemeral port (read it back from ``.port``
         after ``start``); ``reap_interval_s`` defaults to a quarter of the
-        session manager's stall timeout."""
+        session manager's stall timeout.
+
+        ``scrape_port`` enables the localhost telemetry endpoint (``0`` =
+        ephemeral; read ``.scrape_port`` back after ``start``).
+        ``supervisor`` (optional) provides the ``/telemetry`` JSON body;
+        without one, ``/telemetry`` serves the ledger summaries directly.
+        """
         self.sessions = sessions
         self.host = host
         self.port = int(port)
@@ -51,13 +68,37 @@ class IngestServer:
         self.connections_total = 0
         self.protocol_errors = 0
         self.session_errors = 0   # non-protocol failures (engine/session)
+        self.supervisor = supervisor
+        self.scrape_port = scrape_port   # None = disabled
+        self._scrape: Optional[ScrapeServer] = None
         self._server: Optional[asyncio.AbstractServer] = None
         self._reaper: Optional[asyncio.Task] = None
+
+    def _telemetry_doc(self) -> dict:
+        if self.supervisor is not None:
+            doc = self.supervisor.telemetry()
+        else:
+            ledger = self.sessions.engine.ledger
+            doc = {"groups": ledger.summary(),
+                   "per_patient": ledger.transport_summary()}
+        doc["server"] = {"connections_total": self.connections_total,
+                         "protocol_errors": self.protocol_errors,
+                         "session_errors": self.session_errors}
+        return doc
 
     async def start(self) -> None:
         self._server = await asyncio.start_server(
             self._handle, self.host, self.port)
         self.port = self._server.sockets[0].getsockname()[1]
+        if self.scrape_port is not None:
+            metrics = getattr(self.supervisor, "metrics", None)
+            if metrics is None:
+                metrics = self.sessions.engine.metrics
+            self._scrape = ScrapeServer(
+                metrics, self._telemetry_doc, host="127.0.0.1",
+                port=int(self.scrape_port))
+            await self._scrape.start()
+            self.scrape_port = self._scrape.port
         self._reaper = asyncio.ensure_future(self._reap_loop())
 
     async def stop(self) -> None:
@@ -68,6 +109,9 @@ class IngestServer:
             except asyncio.CancelledError:
                 pass
             self._reaper = None
+        if self._scrape is not None:
+            await self._scrape.stop()
+            self._scrape = None
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
@@ -84,6 +128,13 @@ class IngestServer:
                       writer: asyncio.StreamWriter) -> None:
         self.connections_total += 1
         dec = FrameDecoder()
+        registered = set()  # patients whose sender is this connection
+
+        def send(data: bytes) -> None:
+            if writer.is_closing():
+                raise ConnectionError("connection closed")
+            writer.write(data)
+
         try:
             while True:
                 chunk = await reader.read(self.read_bytes)
@@ -93,13 +144,24 @@ class IngestServer:
                     if dec.poisoned:
                         self.protocol_errors += 1
                     break
+                tr = self.sessions.engine.tracer
+                t_dec = tr.now() if tr is not None else 0.0
                 try:
                     frames = dec.feed(chunk)
                 except ProtocolError:
                     self.protocol_errors += 1
                     break   # drop the connection; sessions survive
+                if tr is not None and frames:
+                    tr.complete("frame", "decode", t_dec, tr.now(),
+                                track="ingest",
+                                args={"frames": len(frames),
+                                      "bytes": len(chunk)})
                 try:
                     for frame in frames:
+                        if frame.patient not in registered:
+                            registered.add(frame.patient)
+                            self.sessions.register_sender(frame.patient,
+                                                          send)
                         self.sessions.on_frame(frame)
                 except ProtocolError:       # task change, reorder-cap, …
                     self.protocol_errors += 1

@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.stream.engine import StreamEngine
 
-from .protocol import BYE, DATA, HELLO, Frame, ProtocolError
+from .protocol import (BYE, DATA, EVICTED, HELLO, Frame, ProtocolError,
+                       encode_frame, evicted as evicted_frame)
 
 
 @dataclasses.dataclass
@@ -40,7 +41,10 @@ class ModalityState:
     """Sequencing state for one (patient, modality) stream."""
 
     next_seq: int = 0
-    held: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    # seq → (payload, hold stamp); the stamp (tracer clock, 0.0 when
+    # tracing is off) times the reorder-held span at release
+    held: Dict[int, Tuple[np.ndarray, float]] = dataclasses.field(
+        default_factory=dict)
     in_gap: bool = False           # a hole is currently open
     last_seen: float = 0.0         # last DATA arrival for THIS modality
     stalled: bool = False          # currently past its modality timeout
@@ -89,6 +93,35 @@ class SessionManager:
         self.clock = clock
         self.modality_timeouts = dict(modality_timeouts or {})
         self.sessions: Dict[str, PatientSession] = {}
+        # patient → callable(bytes): where to write server-originated
+        # frames (the EVICTED notice); transports register the live
+        # connection's writer, in-process drivers have none
+        self._senders: Dict[str, Callable[[bytes], None]] = {}
+        self._evicted_c = engine.metrics.counter(
+            "ingest_evicted_notices_total",
+            "EVICTED close notices, by reason and delivery")
+
+    # -- server→client notices ------------------------------------------------
+    def register_sender(self, patient: str,
+                        send: Callable[[bytes], None]) -> None:
+        """Register where ``patient``'s server-originated frames go (the
+        latest connection carrying the patient wins — exactly the resume
+        semantics of the session itself)."""
+        self._senders[patient] = send
+
+    def _notify_evicted(self, s: PatientSession, reason: str) -> None:
+        """Best-effort EVICTED frame to the patient's live connection; the
+        notice (and whether it could be delivered) is always counted."""
+        send = self._senders.get(s.patient)
+        delivered = False
+        if send is not None:
+            try:
+                send(encode_frame(evicted_frame(s.patient, s.task, reason)))
+                delivered = True
+            except Exception:
+                pass    # client already gone: the count still records it
+        self._evicted_c.inc(reason=reason,
+                            delivered="true" if delivered else "false")
 
     # -- lifecycle ------------------------------------------------------------
     def _session(self, frame: Frame, now: float) -> PatientSession:
@@ -104,6 +137,10 @@ class SessionManager:
 
     def on_frame(self, frame: Frame, now: Optional[float] = None) -> None:
         """Process one decoded frame (HELLO / DATA / BYE)."""
+        if frame.ftype == EVICTED:
+            raise ProtocolError(
+                f"EVICTED is server-originated; client for "
+                f"{frame.patient!r} must not send it")
         now = self.clock() if now is None else now
         s = self._session(frame, now)
         led = self.engine.ledger
@@ -136,6 +173,7 @@ class SessionManager:
                 deltas = {k: v for k, v in deltas.items() if v}
                 if deltas:
                     led.record_transport(s.patient, **deltas)
+                self._notify_evicted(s, "bye")
             return
         if s.done:
             raise ProtocolError(
@@ -151,6 +189,7 @@ class SessionManager:
         m.last_seen = now
         m.stalled = False          # any arrival ends the stall; a later
                                    # dropout counts as a fresh stall event
+        tr = self.engine.tracer
         seq = frame.seq
         if seq < m.next_seq or seq in m.held:
             led.record_transport(s.patient, dup_frames=1)
@@ -164,15 +203,24 @@ class SessionManager:
                     f"reorder buffer for ({s.patient!r}, "
                     f"{frame.modality!r}) exceeded {self.reorder_cap} "
                     f"frames waiting for seq {m.next_seq}")
-            m.held[seq] = frame.payload
+            m.held[seq] = (frame.payload,
+                           tr.now() if tr is not None else 0.0)
             led.record_transport(s.patient, reordered_frames=1)
             return
         # in-order: deliver, then flush any now-contiguous held frames
         self.engine.ingest(s.patient, s.task, frame.modality, frame.payload)
+        if tr is not None:
+            tr.instant("session", "deliver", track=s.patient,
+                       args={"modality": frame.modality, "seq": seq})
         m.next_seq += 1
         while m.next_seq in m.held:
-            self.engine.ingest(s.patient, s.task, frame.modality,
-                               m.held.pop(m.next_seq))
+            payload, t_held = m.held.pop(m.next_seq)
+            self.engine.ingest(s.patient, s.task, frame.modality, payload)
+            if tr is not None and t_held:
+                tr.complete("reorder", "held", t_held, tr.now(),
+                            track=s.patient,
+                            args={"modality": frame.modality,
+                                  "seq": m.next_seq})
             m.next_seq += 1
         if m.in_gap and not m.held:
             m.in_gap = False
@@ -214,6 +262,7 @@ class SessionManager:
             # drop the reorder buffers with the rest of the staged state
             for m in s.modalities.values():
                 m.held.clear()
+            self._notify_evicted(s, "stall")
             evicted.append(s.patient)
         return evicted
 

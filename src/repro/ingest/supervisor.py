@@ -15,8 +15,14 @@ telemetry:
 * the ledger's transport column (frames/bytes/dups/gaps/evictions per
   patient, maintained by the ``SessionManager``).
 
-``telemetry()`` returns the whole picture as one dict — what
-``stream_bench --json`` publishes as the ``transport`` block.
+The counters and reservoirs live in the engine's ``MetricsRegistry``
+(``stream_windows_total{patient}``, ``result_queue_dropped_total{patient}``,
+the ``stream_e2e_latency_seconds`` histogram) so the same numbers are
+scrapeable at ``/metrics``; ``telemetry()`` is a *view* over the registry
+that preserves the original dict shape — what ``stream_bench --json``
+publishes as the ``transport`` block.  Queue overflow is attributed per
+patient (which streams lost results, not just how many) and the
+rate-limited warning names the top offenders.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import MetricsRegistry
 from repro.stream.engine import StreamEngine, WindowResult, bounded_admit
 
 _PCTS = (50, 90, 99)
@@ -52,33 +59,64 @@ class Supervisor:
         self.clock = clock
         self._warn_at = 1
         self._reservoir = int(latency_reservoir)
-        self._patients: Dict[str, Dict[str, object]] = {}
-        self._fleet_lat: Deque[float] = collections.deque(
-            maxlen=4 * self._reservoir)
+        # first/last wall stamps per patient (windows_per_s denominators);
+        # the counts/latencies themselves live in the registry
+        self._patients: Dict[str, Dict[str, float]] = {}
+        # telemetry() must be able to read values back, so a disabled
+        # engine registry gets a private live one — the scrape plane is
+        # off, the supervisor still works
+        base = engine.metrics
+        self.metrics: MetricsRegistry = (
+            base if getattr(base, "enabled", False) else MetricsRegistry())
+        self._windows_c = self.metrics.counter(
+            "stream_windows_total", "results drained, by patient")
+        self._dropped_c = self.metrics.counter(
+            "result_queue_dropped_total",
+            "results evicted from the supervisor queue, by patient")
+        self._lat_h = self.metrics.histogram(
+            "stream_e2e_latency_seconds",
+            "window ready -> batch materialized, raw-sample reservoir",
+            reservoir=self._reservoir)
+        self._depth_g = self.metrics.gauge(
+            "result_queue_depth", "supervisor queue occupancy")
 
     # -- drain ----------------------------------------------------------------
+    def _attribute_drop(self, victim: WindowResult) -> None:
+        self._dropped_c.inc(patient=victim.patient)
+
+    def _drop_label(self) -> str:
+        worst = sorted(self._dropped_c.items(),
+                       key=lambda kv: -kv[1])[:3]
+        blame = ", ".join(f"{d.get('patient', '?')}={int(v)}"
+                          for d, v in worst)
+        return (f"supervisor result queue full (capacity={self.capacity}; "
+                f"most-dropped: {blame})")
+
     def poll(self) -> int:
         """Move every dispatched result out of the engine; returns how many."""
+        tr = self.engine.tracer
+        t_drain = tr.now() if tr is not None else 0.0
         rows = self.engine.pop_results()
         now = self.clock()
         for r in rows:
             self.total_windows += 1
+            self._windows_c.inc(patient=r.patient)
             st = self._patients.get(r.patient)
             if st is None:
-                st = self._patients[r.patient] = {
-                    "windows": 0, "first": now,
-                    "lat": collections.deque(maxlen=self._reservoir)}
-            st["windows"] += 1
+                st = self._patients[r.patient] = {"first": now}
             st["last"] = now
             if r.ready_wall:
                 # ready → batch materialized (done_wall); poll-time fallback
                 # only for results produced before the stamps existed
                 lat = (r.done_wall or now) - r.ready_wall
-                st["lat"].append(lat)
-                self._fleet_lat.append(lat)
+                self._lat_h.observe(lat, patient=r.patient)
             self.dropped, self._warn_at = bounded_admit(
                 self.queue, r, self.capacity, self.dropped, self._warn_at,
-                f"supervisor result queue full (capacity={self.capacity})")
+                self._drop_label, on_drop=self._attribute_drop)
+        self._depth_g.set(len(self.queue))
+        if tr is not None and rows:
+            tr.complete("drain", "supervisor.poll", t_drain, tr.now(),
+                        track="drain", args={"results": len(rows)})
         return len(rows)
 
     def pop(self, max_n: Optional[int] = None) -> List[WindowResult]:
@@ -95,26 +133,37 @@ class Supervisor:
 
     # -- telemetry ------------------------------------------------------------
     def latency_samples(self) -> List[float]:
-        """The fleet-wide ready→result latency reservoir (seconds) — raw
-        samples, so a multi-worker aggregator can compute TRUE fleet
-        percentiles from the concatenation instead of averaging per-worker
-        percentiles (which has no statistical meaning)."""
-        return list(self._fleet_lat)
+        """The fleet-wide ready→result latency samples (seconds) — the
+        concatenation of the per-patient reservoirs, raw, so a multi-worker
+        aggregator can compute TRUE fleet percentiles from the concatenation
+        instead of averaging per-worker percentiles (which has no
+        statistical meaning)."""
+        return self._lat_h.samples()
+
+    def dropped_by_patient(self) -> Dict[str, int]:
+        """{patient: results lost to queue overflow} — the attribution
+        behind the ``result_queue_dropped_total`` metric."""
+        return {d.get("patient", "?"): int(v)
+                for d, v in self._dropped_c.items()}
 
     def telemetry(self) -> Dict[str, object]:
+        """The original dict shape, derived from the metrics registry."""
         pats: Dict[str, Dict[str, float]] = {}
         for pid, st in sorted(self._patients.items()):
             dt = max(st.get("last", st["first"]) - st["first"], 0.0)
+            windows = int(self._windows_c.value(patient=pid))
             pats[pid] = {
-                "windows": st["windows"],
-                "windows_per_s": st["windows"] / dt if dt else 0.0,
-                "latency_ms": _percentiles(list(st["lat"])),
+                "windows": windows,
+                "windows_per_s": windows / dt if dt else 0.0,
+                "latency_ms": _percentiles(self._lat_h.samples(patient=pid)),
             }
+        self._depth_g.set(len(self.queue))
         return {
             "queue": {"capacity": self.capacity, "depth": len(self.queue),
                       "dropped": self.dropped,
+                      "dropped_by_patient": self.dropped_by_patient(),
                       "total_windows": self.total_windows},
-            "latency_ms": _percentiles(list(self._fleet_lat)),
+            "latency_ms": _percentiles(self.latency_samples()),
             "patients": pats,
             "per_patient": self.engine.ledger.transport_summary(),
         }

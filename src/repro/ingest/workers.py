@@ -63,6 +63,7 @@ class WorkerConfig:
     stall_timeout_s: float = 1.5
     high_watermark: int = 4096
     supervisor_capacity: int = 4096
+    scrape: bool = False                # per-worker localhost /metrics port
     # reference-forest recipe (cough pipelines only) — retrained per
     # process from the same seed, so every worker holds identical trees
     forest_train: Tuple[int, int, int, int] = (96, 123, 10, 5)
@@ -115,6 +116,11 @@ def _worker_payload(engine, supervisor, server) -> Dict[str, object]:
                    "session_errors": server.session_errors},
         "windows": supervisor.total_windows,
         "devices": engine.dp_size,
+        # full registry snapshot (counters/gauges + RAW histogram samples)
+        # — the aggregator merges these the same way as latency_s: sums
+        # and concatenations, never precomputed percentiles
+        "metrics": supervisor.metrics.snapshot(),
+        "scrape_port": getattr(server, "scrape_port", None),
     }
 
 
@@ -137,7 +143,9 @@ def worker_main(cfg: WorkerConfig, conn) -> None:
         async def serve() -> Dict[str, object]:
             async with IngestServer(
                     sessions, port=0, high_watermark=cfg.high_watermark,
-                    reap_interval_s=cfg.stall_timeout_s / 4) as srv:
+                    reap_interval_s=cfg.stall_timeout_s / 4,
+                    supervisor=supervisor,
+                    scrape_port=0 if cfg.scrape else None) as srv:
                 conn.send(("ready", srv.port))
                 done = [False]
                 pump = asyncio.ensure_future(
@@ -249,6 +257,7 @@ def aggregate_rollup(payloads: Sequence[Dict[str, object]]
 
     lat: List[float] = []
     queue = {"capacity": 0, "depth": 0, "dropped": 0, "total_windows": 0}
+    dropped_by_patient: Dict[str, int] = {}
     patients: Dict[str, object] = {}
     servers = {"connections_total": 0, "protocol_errors": 0,
                "session_errors": 0}
@@ -257,10 +266,18 @@ def aggregate_rollup(payloads: Sequence[Dict[str, object]]
         lat.extend(p["latency_s"])
         for k in queue:
             queue[k] += p["queue"][k]
+        for pid, n in p["queue"].get("dropped_by_patient", {}).items():
+            dropped_by_patient[pid] = dropped_by_patient.get(pid, 0) + n
         patients.update(p["patients"])
         for k in servers:
             servers[k] += p["server"][k]
         escalation.update(p["escalation"])
+    queue["dropped_by_patient"] = dropped_by_patient
+
+    # metric registries merge like everything above: counters/gauges sum,
+    # histogram reservoirs concatenate (raw samples, percentiles at render)
+    from repro.obs import merge_snapshots
+    metrics = merge_snapshots([p.get("metrics") or {} for p in payloads])
     return {
         "groups": groups,
         "transport": transport,
@@ -270,8 +287,10 @@ def aggregate_rollup(payloads: Sequence[Dict[str, object]]
         "servers": servers,
         "escalation": escalation,
         "windows": sum(p["windows"] for p in payloads),
+        "metrics": metrics,
         "workers": [{"worker_id": i, "windows": p["windows"],
-                     "devices": p["devices"]}
+                     "devices": p["devices"],
+                     "scrape_port": p.get("scrape_port")}
                     for i, p in enumerate(payloads)],
     }
 
@@ -294,7 +313,8 @@ def run_worker_fleet(sim: FleetSimulator, n_workers: int, *,
                      devices: int = 0, max_batch: int = 32,
                      pad_policy: str = "max", stall_timeout_s: float = 1.5,
                      arrival_seed: int = 1, drain_timeout_s: float = 60.0,
-                     start_timeout_s: float = 300.0) -> Dict[str, object]:
+                     start_timeout_s: float = 300.0,
+                     scrape: bool = False) -> Dict[str, object]:
     """Drive one ``FleetSimulator`` replay through ``n_workers`` worker
     processes and return the aggregated fleet rollup (plus ``wall_s``, the
     end-to-end client-drive + drain wall clock).
@@ -317,7 +337,8 @@ def run_worker_fleet(sim: FleetSimulator, n_workers: int, *,
             cfg = WorkerConfig(worker_id=wid, tasks=tasks, pins=pins,
                                n_patients=len(plans), devices=devices,
                                max_batch=max_batch, pad_policy=pad_policy,
-                               stall_timeout_s=stall_timeout_s)
+                               stall_timeout_s=stall_timeout_s,
+                               scrape=scrape)
             parent, child = ctx.Pipe()
             proc = ctx.Process(target=worker_main, args=(cfg, child),
                                daemon=True)

@@ -29,6 +29,7 @@ from repro.core.formats import get_format
 from repro.core.policy import QuantPolicy
 from repro.core.quant import quantize_params
 from repro.models.attention import KVCache
+from repro.obs import MetricsRegistry, bind_serving_engine
 from repro.stream.engine import bucket_size
 
 from .accounting import (TokenLedger, kv_traffic_bytes, prefill_energy_nj,
@@ -69,6 +70,11 @@ class _Lane:
         self.ctx = np.zeros((B,), np.int64)  # valid cache length per row
         self._prefill = jax.jit(self.model.prefill, static_argnums=(2,))
         self._decode = _make_decode_step(self.model)
+        self._seen_ppad: set = set()  # prompt buckets already compiled
+        # lane creation builds exactly one decode program per lane
+        engine.metrics.counter(
+            "jit_programs_total", "compiled programs by site").inc(
+                site="serve.decode", lane=sp.lane)
 
 
 def _make_decode_step(model):
@@ -110,7 +116,8 @@ class ServingEngine:
     """
 
     def __init__(self, model, params, cfg: ServeConfig,
-                 policy: Union[ServePolicy, QuantPolicy] = None):
+                 policy: Union[ServePolicy, QuantPolicy] = None,
+                 metrics=None, tracer=None):
         self.model = model
         self.cfg = cfg
         if policy is None:
@@ -122,7 +129,17 @@ class ServingEngine:
         self._quantized: Dict[Optional[str], object] = {}
         self._lanes: Dict[str, _Lane] = {}
         self._base_key = jax.random.key(cfg.seed)
-        self.scheduler = Scheduler(cfg.batch_size, cfg.max_completions)
+        # observability mirrors the stream engine: a private registry by
+        # default, NULL_METRICS to disable, tracer off unless provided
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self.tracer = tracer
+        bind_serving_engine(self.metrics, self)
+        self._jit_programs = self.metrics.counter(
+            "jit_programs_total", "compiled programs by site")
+        self._jit_hits = self.metrics.counter(
+            "jit_cache_hits_total", "compiled-program cache hits by site")
+        self.scheduler = Scheduler(cfg.batch_size, cfg.max_completions,
+                                   metrics=self.metrics)
         self.ledger = TokenLedger()
 
     # -- params -----------------------------------------------------------
@@ -165,6 +182,14 @@ class ServingEngine:
         lane = self._lane(req.policy)
         P = len(req.prompt)
         P_pad = bucket_size(P, self.cfg.max_prompt)
+        # prefill retraces once per (lane, prompt bucket): count compiles
+        # vs hits so a bucketing regression (every prompt its own shape)
+        # shows up as a first-class metric, not a latency mystery
+        if P_pad not in lane._seen_ppad:
+            lane._seen_ppad.add(P_pad)
+            self._jit_programs.inc(site="serve.prefill", lane=req.policy.lane)
+        else:
+            self._jit_hits.inc(site="serve.prefill", lane=req.policy.lane)
         toks = np.zeros((1, P_pad), np.int32)
         toks[0, :P] = req.prompt  # right-pad; lengths mask the tail
         t0 = time.perf_counter()
@@ -188,11 +213,21 @@ class ServingEngine:
         else:
             tok = int(jnp.argmax(lv))
         jax.block_until_ready(lane.caches)
+        t1 = time.perf_counter()
+        if self.tracer is not None:
+            self.tracer.complete("serve", "prefill", t0, t1,
+                                 track=f"lane:{req.policy.lane}",
+                                 args={"rid": req.rid, "P": P,
+                                       "P_pad": P_pad, "slot": slot})
         self.ledger.record_prefill(
-            req.policy.lane, P, time.perf_counter() - t0,
+            req.policy.lane, P, t1 - t0,
             prefill_energy_nj(self.model.cfg, P, req.policy))
         retired = self.scheduler.on_token(req.policy.lane, slot, tok)
         if retired:
+            if self.tracer is not None:
+                self.tracer.instant("serve", "retire",
+                                    track=f"lane:{req.policy.lane}",
+                                    args={"rid": req.rid, "slot": slot})
             return
         lane.cur = lane.cur.at[slot].set(tok)
         lane.rids[slot] = req.rid
@@ -205,8 +240,14 @@ class ServingEngine:
     def step(self) -> int:
         """Admit what fits, then run one batched decode step per active
         lane.  Returns the number of real tokens emitted."""
+        tr = self.tracer
         for req, slot in self.scheduler.take_admissions():
+            t_adm = tr.now() if tr is not None else 0.0
             self._admit(req, slot)
+            if tr is not None:
+                tr.complete("serve", "admit", t_adm, tr.now(),
+                            track=f"lane:{req.policy.lane}",
+                            args={"rid": req.rid, "slot": slot})
         emitted = 0
         for lane_name in self.scheduler.active_lanes():
             lane = self._lanes[lane_name]
@@ -235,7 +276,16 @@ class ServingEngine:
                 lane.steps[i] += 1
                 if self.scheduler.on_token(lane_name, i, int(toks[i])):
                     lane.active[i] = False
+                    if tr is not None:
+                        tr.instant("serve", "retire",
+                                   track=f"lane:{lane_name}",
+                                   args={"rid": int(lane.rids[i]),
+                                         "slot": int(i)})
             emitted += len(rows)
+            if tr is not None:
+                tr.complete("serve", "decode", t0, t0 + wall,
+                            track=f"lane:{lane_name}",
+                            args={"rows": len(rows)})
             self.ledger.record_decode(
                 lane_name, len(rows), self.cfg.batch_size - len(rows),
                 wall, energy, kv_read)

@@ -67,7 +67,8 @@ class Slot:
 class Scheduler:
     """Admission + slot lifecycle for a multi-lane continuous batch."""
 
-    def __init__(self, batch_size: int, max_completions: Optional[int] = 256):
+    def __init__(self, batch_size: int, max_completions: Optional[int] = 256,
+                 metrics=None):
         self.batch_size = batch_size
         self.waiting: Deque[Request] = collections.deque()
         self.slots: Dict[str, List[Optional[Slot]]] = {}
@@ -76,6 +77,14 @@ class Scheduler:
         self.dropped = 0
         self._warn_at = 1
         self._next_rid = 0
+        # optional engine registry: retirement + overflow become scrapeable
+        from repro.obs import NULL_METRICS
+        self._metrics = NULL_METRICS if metrics is None else metrics
+        self._completions_c = self._metrics.counter(
+            "serve_completions_total", "retired requests by lane and reason")
+        self._comp_dropped_c = self._metrics.counter(
+            "serve_completions_dropped_total",
+            "completions evicted from the bounded queue, by lane")
 
     # -- admission --------------------------------------------------------
     def submit(self, request: Request) -> int:
@@ -126,9 +135,11 @@ class Scheduler:
                           tokens=np.asarray(slot.tokens, np.int32),
                           prompt_len=len(slot.request.prompt),
                           finish_reason=reason, lane=lane)
+        self._completions_c.inc(lane=lane, reason=reason)
         self.dropped, self._warn_at = bounded_admit(
             self.completions, comp, self.max_completions, self.dropped,
-            self._warn_at, "serve completions")
+            self._warn_at, "serve completions",
+            on_drop=lambda v: self._comp_dropped_c.inc(lane=v.lane))
         self.slots[lane][slot_idx] = None
         return True
 

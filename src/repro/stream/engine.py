@@ -29,6 +29,9 @@ from typing import Deque, Dict, List, Optional, Set, Tuple
 import jax
 import numpy as np
 
+from repro.core.arith import fusion_cache_key
+from repro.obs import MetricsRegistry, bind_stream_engine
+
 from .accounting import EnergyLedger, window_energy_nj
 from .pipelines import Pipeline
 from .ring import Window, WindowDispatcher
@@ -44,17 +47,27 @@ def bucket_size(n: int, max_batch: int) -> int:
 
 
 def bounded_admit(queue: Deque, item, capacity: Optional[int],
-                  dropped: int, warn_at: int, label: str) -> Tuple[int, int]:
+                  dropped: int, warn_at: int, label,
+                  on_drop=None) -> Tuple[int, int]:
     """Append ``item`` to a bounded deque, dropping the OLDEST entry past
     ``capacity`` with a rate-limited (doubling) warning.  Returns the
     updated ``(dropped, warn_at)`` counters.  Shared by the engine's result
     backlog and the supervisor's queue so the overflow policy has exactly
-    one implementation."""
+    one implementation.
+
+    ``on_drop(victim)`` runs for every evicted entry BEFORE the warning
+    fires, so callers can attribute drops (per patient, into a metrics
+    counter) rather than only summing them; ``label`` may be a callable
+    producing the message lazily — attribution detail is only formatted
+    on the rate-limited path, never per admit."""
     if capacity is not None and len(queue) >= capacity:
-        queue.popleft()
+        victim = queue.popleft()
         dropped += 1
+        if on_drop is not None:
+            on_drop(victim)
         if dropped >= warn_at:
-            warnings.warn(f"{label}: dropped oldest — {dropped} drops so "
+            msg = label() if callable(label) else label
+            warnings.warn(f"{msg}: dropped oldest — {dropped} drops so "
                           f"far", RuntimeWarning, stacklevel=3)
             warn_at = max(warn_at * 2, 1)
     queue.append(item)
@@ -88,7 +101,7 @@ class StreamEngine:
                  autotune_horizon: int = 256,
                  pad_auto_threshold: float = 0.25,
                  result_capacity: Optional[int] = 4096,
-                 mesh_info=None):
+                 mesh_info=None, metrics=None, tracer=None):
         """``pad_to_max``: always pad dispatches to ``max_batch`` — exactly
         one compiled batch shape per (task, format), the steady-state service
         configuration. Default pow2 bucketing compiles more shapes but wastes
@@ -109,6 +122,13 @@ class StreamEngine:
         an undrained engine drops its OLDEST results past the cap (counted
         in ``dropped_results``, with a rate-limited warning) instead of
         growing forever.  ``None`` restores the unbounded legacy behavior.
+
+        ``metrics`` is the engine's observability registry (a
+        ``repro.obs.MetricsRegistry``; ``None`` creates a private one, and
+        ``repro.obs.NULL_METRICS`` disables the plane at ~zero cost).  The
+        session/supervisor/server layers share it.  ``tracer`` (a
+        ``repro.obs.Tracer``, default off) records per-window lifecycle
+        spans — both are host-side only and never enter jit.
 
         ``mesh_info`` (a ``repro.distributed.MeshInfo``, e.g. from
         ``launch.mesh.make_fleet_mesh_info``) shards every dispatch over the
@@ -139,6 +159,18 @@ class StreamEngine:
         self.dropped_results = 0
         self._drop_warn_at = 1
         self.ledger = EnergyLedger()
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self.tracer = tracer
+        bind_stream_engine(self.metrics, self)
+        self._jit_programs = self.metrics.counter(
+            "jit_programs_total", "compiled programs by site")
+        self._jit_hits = self.metrics.counter(
+            "jit_cache_hits_total", "compiled-program cache hits by site")
+        self._fusion_changes = self.metrics.counter(
+            "jit_fusion_key_changes_total",
+            "fusion_cache_key() flips observed between dispatches — "
+            "each flip retraces every live (task, fmt, shape) program")
+        self._last_fusion_key = None
         self.results: Deque[WindowResult] = collections.deque()
         self._evicted: Set[Tuple[str, str]] = set()
         self._dispatchers: Dict[Tuple[str, str], WindowDispatcher] = {}
@@ -147,7 +179,7 @@ class StreamEngine:
         # patient picks up the new format on the next pump
         self._pending: Dict[Tuple[str, str], List[Window]] = {}
         self._pending_counts: Dict[Tuple[str, str], int] = {}
-        self._fns: Dict[Tuple[str, str], object] = {}
+        self._fns: Dict[Tuple, object] = {}
         # per-(patient, task) stateful trackers (pipelines with make_tracker)
         self._trackers: Dict[Tuple[str, str], object] = {}
 
@@ -280,10 +312,23 @@ class StreamEngine:
         return "max" if self._effective_pad_to_max() else "pow2"
 
     def _fn(self, task: str, fmt: str):
-        key = (task, fmt)
-        if key not in self._fns:
-            self._fns[key] = self.pipelines[task].make_fn(fmt)
-        return self._fns[key]
+        # keyed on the live fusion_cache_key so a backend/quire toggle
+        # mid-flight builds a fresh program instead of serving the stale
+        # one — and so the jit probes see every retrace storm it causes
+        fkey = fusion_cache_key()
+        if self._last_fusion_key is None:
+            self._last_fusion_key = fkey
+        elif fkey != self._last_fusion_key:
+            self._fusion_changes.inc(site="stream")
+            self._last_fusion_key = fkey
+        key = (task, fmt, fkey)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = self.pipelines[task].make_fn(fmt)
+            self._jit_programs.inc(site="stream", task=task, fmt=fmt)
+        else:
+            self._jit_hits.inc(site="stream", task=task, fmt=fmt)
+        return fn
 
     def _sharded_fn(self, task: str, fmt: str):
         """shard_map wrapper over the mesh's data axis (cached per
@@ -340,6 +385,19 @@ class StreamEngine:
                            pipe.ops_per_window,
                            n_escalated=n_esc, escalation_extra_nj=esc_nj)
         done = time.perf_counter()
+        tr = self.tracer
+        if tr is not None:
+            # host-side stamps only: ready_wall/t0/done already exist for
+            # the ledger; tracing adds no clock reads on the jit path
+            tr.complete("dispatch", f"{task}/{fmt}", t0, done,
+                        track="dispatch",
+                        args={"task": task, "fmt": fmt, "B": B,
+                              "Bpad": Bpad})
+            for w in windows:
+                if w.ready_wall:
+                    tr.complete("stage", "ready->dispatch", w.ready_wall,
+                                t0, track=w.patient,
+                                args={"widx": w.widx, "task": task})
         for w, row in zip(windows, rows):
             self._append_result(WindowResult(
                 w.patient, task, w.widx, fmt, w.t0_s, row,
@@ -353,7 +411,11 @@ class StreamEngine:
             self._drop_warn_at,
             f"engine results backlog full (result_capacity="
             f"{self.result_capacity}); drain with pop_results() or run a "
-            f"repro.ingest.Supervisor")
+            f"repro.ingest.Supervisor",
+            on_drop=lambda v: self.metrics.counter(
+                "engine_results_dropped_total",
+                "WindowResults evicted from the engine backlog"
+            ).inc(patient=v.patient))
 
     def _track(self, pipe: Pipeline, task: str, fmt: str,
                windows: List[Window], rows: List[Dict[str, np.ndarray]]
@@ -485,6 +547,11 @@ class StreamEngine:
         self.dropped_results = 0
         self._drop_warn_at = 1
         self.ledger = EnergyLedger()
+        # metric VALUES reset with the ledger (registrations + collectors
+        # survive, like the compiled fns); warmup counts never leak into a
+        # measured pass
+        self.metrics.reset()
+        self._last_fusion_key = None
 
     # -- reporting ------------------------------------------------------------
     def fleet_summary(self) -> Dict[str, Dict[str, float]]:

@@ -318,7 +318,16 @@ def test_stream_bench_json_schema_matches_committed(forest, tmp_path):
     # emit the keys as None placeholders
     assert doc["ab"] is None and doc["smoke_baseline"] is None
     assert doc["scaling"] is None and doc["microbench"] is None
-    assert doc["quire_ab"] is None
+    assert doc["quire_ab"] is None and doc["obs_ab"] is None
+    # the telemetry-plane overhead A/B: paired on/off arms with fleet
+    # medians and the ratio check_perf gates at a few percent
+    oab = committed["obs_ab"]
+    assert set(oab) == {"repeat", "arms", "ratio"}
+    assert set(oab["arms"]) == {"on", "off"}
+    for arm in oab["arms"].values():
+        assert set(arm) == {"fleet_us_per_window", "fleet_windows_per_s",
+                            "wall_s"}
+    assert 0.0 < oab["ratio"] <= 1.03         # instrumentation ≈ free
     # the quire A/B block: both acceptance sweeps, each with on/off arms
     # carrying timing + model energy + accuracy-vs-fp32 and the ratios
     qab = committed["quire_ab"]
