@@ -26,6 +26,10 @@ at most ``1 + --obs-max`` (default 3%) — instrumentation is only allowed
 to exist because it is nearly free.  The current run's block is gated
 when present, else the committed baseline's; a record with neither is
 noted but passes (the overhead evidence then simply isn't being tracked).
+The ``chaos`` block (recorded by ``stream_bench --json --chaos``) is
+gated the same way: the fault-free ACK/credit/heartbeat-plane on/off
+end-to-end µs/window ratio may not exceed ``1 + --chaos-max`` (default
+5%) — resilience must also ride along nearly free when nothing fails.
 
 Scope caveat: smoke runs skip the warmup pass, so the gated number is
 dominated by jit compile time (hundreds of ms/window vs ~0.3 warm).  The
@@ -78,6 +82,11 @@ def main():
                     help="allowed telemetry-plane overhead: the obs_ab "
                          "on/off fleet µs/window ratio may not exceed "
                          "1 + this (stream family; default 0.03)")
+    ap.add_argument("--chaos-max", type=float, default=0.05,
+                    help="allowed fault-tolerance overhead: the chaos "
+                         "block's fault-free ACK/heartbeat-plane on/off "
+                         "end-to-end µs/window ratio may not exceed "
+                         "1 + this (stream family; default 0.05)")
     args = ap.parse_args()
     spec = BENCHMARKS[args.benchmark]
 
@@ -138,6 +147,22 @@ def main():
         verdict = "REGRESSION" if ratio > limit else "ok"
         print(f"obs-overhead fleet us_per_window on/off ratio: "
               f"{ratio:.3f} (gate {limit:.2f}) [{verdict}]")
+        if ratio > limit:
+            sys.exit(1)
+
+        # fault-tolerance overhead gate: the ACK/credit/heartbeat plane
+        # must be nearly free when nothing fails (stream_bench --chaos
+        # records the paired ack-on/ack-off end-to-end A/B)
+        ch = cur.get("chaos") or base_doc.get("chaos")
+        if not ch:
+            print("chaos-overhead: no chaos block in either record "
+                  "(stream_bench --json --chaos) — not gated")
+            return
+        ratio = ch["overhead"]["ratio"]
+        limit = 1.0 + args.chaos_max
+        verdict = "REGRESSION" if ratio > limit else "ok"
+        print(f"chaos-overhead fleet end-to-end us_per_window ack on/off "
+              f"ratio: {ratio:.3f} (gate {limit:.2f}) [{verdict}]")
         if ratio > limit:
             sys.exit(1)
 

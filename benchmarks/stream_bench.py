@@ -37,6 +37,14 @@ per-format throughput (windows/sec) and model energy (nJ/window).
                                                  # telemetry-plane on/off
                                                  # overhead A/B (CI-gated
                                                  # at a few percent)
+  python benchmarks/stream_bench.py --smoke --json --chaos --repeat 1
+                                                 # fault harness: worker
+                                                 # kill + partition +
+                                                 # corrupt, recovery
+                                                 # asserted bit-identical,
+                                                 # plus the ACK-plane
+                                                 # overhead A/B (CI-gated
+                                                 # by --chaos-max)
 
 Output follows benchmarks/run.py conventions: ``name,us_per_call,derived``
 CSV rows, one per (task, format) group plus a fleet rollup.  ``--json``
@@ -162,7 +170,8 @@ def _stream_transport(engine, supervisor, sim, transport, stall_timeout_s,
             pump = asyncio.ensure_future(
                 supervisor.run_async(0.005, stop=lambda: done[0]))
             await sim.run_tcp("127.0.0.1", srv.port,
-                              arrival_seed=arrival_seed)
+                              arrival_seed=arrival_seed,
+                              ledger=engine.ledger)
             # stalled patients close only via the reaper: wait for it
             deadline = time.perf_counter() + 4 * stall_timeout_s + 10.0
             while not sm.all_closed():
@@ -351,6 +360,7 @@ def _run_measured(patients, windows, max_batch, smoke, homogeneous,
         "ab": None,             # filled by the --ab paired harness
         "obs_ab": None,         # filled by the --obs-ab overhead harness
         "quire_ab": None,       # filled by the --quire-ab paired harness
+        "chaos": None,          # filled by the --chaos fault harness
         "smoke_baseline": None,  # filled by --smoke-baseline (CI perf gate)
         "scaling": None,        # filled by the --scaling curve harness
         "microbench": None,     # filled by --microbench
@@ -429,6 +439,7 @@ def _run_workers(patients, windows, max_batch, smoke, homogeneous, seed,
         "ab": None,
         "obs_ab": None,
         "quire_ab": None,
+        "chaos": None,
         "smoke_baseline": None,
         "scaling": None,
         "microbench": None,
@@ -616,6 +627,99 @@ def run_obs_ab(repeat, forest, **kwargs):
     return out
 
 
+def run_chaos(patients, windows, max_batch, stall_timeout_s, pad_policy,
+              seed, repeat=1, workers=2, realtime_factor=40.0):
+    """The fault harness: a worker-pool fleet under injected faults, plus
+    the flow-control overhead A/B.
+
+    **Soak** — one fault-free reference pass, then one pass with a fault
+    schedule (worker 0 SIGKILLed mid-stream, one patient's connection
+    partitioned, one patient's frame corrupted in flight) over the SAME
+    replay.  The recovery contract is asserted, not just reported: every
+    delivered window recovered (respawn + HELLO reconnect-replay), every
+    patient's result digest bit-identical to the fault-free run —
+    unaffected patients untouched, failed-over patients exactly-once.
+
+    **Overhead** — ``repeat`` alternating fault-free pool passes with the
+    ACK/credit plane armed vs disabled (the PR-4 wire behaviour); medians
+    and the on/off µs/window ratio, which ``check_perf --chaos-max`` gates
+    (resilience must ride along nearly free when nothing fails).
+    """
+    from repro.ingest import ChaosPlan
+    from repro.ingest.workers import run_worker_fleet
+
+    def fleet(ack, chaos=None, rt=0.0):
+        sim = _build_simulator(patients, windows, True, 0, seed)
+        return run_worker_fleet(
+            sim, workers, max_batch=max_batch, pad_policy=pad_policy
+            or "max", stall_timeout_s=stall_timeout_s,
+            arrival_seed=seed + 2, ack=ack, chaos=chaos,
+            realtime_factor=rt)
+
+    print("# chaos soak: fault-free reference pass", file=sys.stderr)
+    ref = fleet(ack=True)
+    # fault schedule: kill the first worker mid-stream (realtime pacing
+    # stretches the drive so the kill lands while frames are in flight),
+    # partition one surviving patient, corrupt one frame in flight
+    victims = sorted(ref["digests"])
+    # early triggers: even a smoke-sized stream has ≥2 DATA frames, so the
+    # partition and corruption demonstrably fire (asserted below)
+    plan = ChaosPlan(kill_worker=0, kill_after_s=0.4,
+                     partition_patients=(victims[-1],),
+                     partition_after_frames=2,
+                     corrupt_patients=(victims[-2],), corrupt_at_frame=1)
+    print("# chaos soak: faulted pass (kill worker 0 + partition + "
+          "corrupt)", file=sys.stderr)
+    doc = fleet(ack=True, chaos=plan, rt=realtime_factor)
+    matches = sum(1 for p, d in ref["digests"].items()
+                  if doc["digests"].get(p) == d)
+    expect = patients * windows
+    assert not doc["failed_workers"], doc["failed_workers"]
+    assert doc["windows"] == expect, (doc["windows"], expect)
+    assert matches == len(ref["digests"]) == patients, (
+        f"digest mismatch: {matches}/{len(ref['digests'])} patients "
+        f"bit-identical to the fault-free run")
+    cl = doc["recovery"]["client"]
+    assert doc["recovery"]["worker_restarts"] >= 1
+    assert cl["partitions"] >= 1 and cl["corrupted_frames"] >= 1, cl
+    soak = {
+        "patients": patients, "windows": doc["windows"],
+        "worker_killed": plan.kill_worker,
+        "worker_restarts": doc["recovery"]["worker_restarts"],
+        "recovery_s": doc["recovery"]["recovery_s"],
+        "client": doc["recovery"]["client"],
+        "digest_matches": matches, "digest_total": len(ref["digests"]),
+        "failed_workers": doc["failed_workers"],
+        "result_queue": doc["result_queue"],
+    }
+
+    passes = {"ack_on": [], "ack_off": []}
+    for r in range(repeat):
+        order = (("ack_on", "ack_off") if r % 2 == 0
+                 else ("ack_off", "ack_on"))
+        for arm in order:
+            print(f"# chaos overhead pass {r + 1}/{repeat} arm={arm}",
+                  file=sys.stderr)
+            passes[arm].append(fleet(ack=(arm == "ack_on")))
+    arms = {}
+    for arm, docs in passes.items():
+        # end-to-end µs/window (wall / windows): the ACK/credit/heartbeat
+        # work lives on the server's event loop and the client's pacing,
+        # not in engine dispatch — only the end-to-end clock sees it
+        arms[arm] = {
+            "fleet_us_per_window": _median(
+                [1e6 * d["wall_s"] / d["windows"] if d["windows"] else 0.0
+                 for d in docs]),
+            "wall_s": _median([d["wall_s"] for d in docs]),
+        }
+    off_us = arms["ack_off"]["fleet_us_per_window"]
+    return {"repeat": repeat, "workers": workers, "soak": soak,
+            "overhead": {
+                "arms": arms,
+                "ratio": (arms["ack_on"]["fleet_us_per_window"] / off_us
+                          if off_us else 0.0)}}
+
+
 def _quire_ab_inputs(forest, batch):
     """The two acceptance sweeps: one real cough batch (posit16) and one
     real ECG batch (posit8), each with its pipeline and the output key the
@@ -753,6 +857,16 @@ def main():
                          "sweeps (cough/posit16, rpeak/posit8): µs/window, "
                          "nJ/window and accuracy vs fp32 per arm; lands in "
                          "the JSON 'quire_ab' block")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault harness: a worker-pool fleet with worker 0 "
+                         "SIGKILLed mid-stream (+ a partitioned and a "
+                         "corrupted patient), asserted bit-identical to "
+                         "the fault-free pass, plus the paired ACK-plane "
+                         "on/off overhead A/B; lands in the JSON 'chaos' "
+                         "block (check_perf --chaos-max gates the ratio)")
+    ap.add_argument("--chaos-workers", type=int, default=2, metavar="M",
+                    help="worker processes for the --chaos fleet "
+                         "(default 2)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="export the measured pass's spans as Chrome "
                          "trace-event JSON (opens in Perfetto / "
@@ -775,9 +889,12 @@ def main():
     if args.ab and args.repeat < 1:
         ap.error("--repeat must be ≥ 1")
     if ((args.ab or args.smoke_baseline or args.scaling or args.quire_ab
-            or args.obs_ab) and not args.json):
-        ap.error("--ab/--smoke-baseline/--scaling/--quire-ab/--obs-ab "
-                 "results only land in the JSON record: pass --json [PATH]")
+            or args.obs_ab or args.chaos) and not args.json):
+        ap.error("--ab/--smoke-baseline/--scaling/--quire-ab/--obs-ab/"
+                 "--chaos results only land in the JSON record: pass "
+                 "--json [PATH]")
+    if args.chaos and args.chaos_workers < 2:
+        ap.error("--chaos needs ≥ 2 workers (one dies, one survives)")
     if args.workers > 1:
         if args.transport == "inproc":
             print("# --workers forces --transport tcp", file=sys.stderr)
@@ -849,6 +966,11 @@ def main():
         doc["obs_ab"] = run_obs_ab(args.repeat, forest, **kwargs)
     if args.quire_ab:
         doc["quire_ab"] = run_quire_ab(forest, repeat=args.repeat)
+    if args.chaos:
+        doc["chaos"] = run_chaos(patients, windows, max_batch,
+                                 args.stall_timeout, args.pad_policy,
+                                 args.seed, repeat=args.repeat,
+                                 workers=args.chaos_workers)
     if args.microbench:
         doc["microbench"] = run_microbench(devices=args.devices)
     if args.scaling:
@@ -918,6 +1040,15 @@ def main():
               f"on={oab['arms']['on']['fleet_us_per_window']:.0f};"
               f"off={oab['arms']['off']['fleet_us_per_window']:.0f};"
               f"ratio={oab['ratio']:.3f}")
+    if doc["chaos"]:
+        ch = doc["chaos"]
+        sk = ch["soak"]
+        print(f"stream_bench/chaos,0,"
+              f"restarts={sk['worker_restarts']};"
+              f"recovered_windows={sk['windows']};"
+              f"replayed_frames={sk['client']['replayed_frames']};"
+              f"digests={sk['digest_matches']}/{sk['digest_total']};"
+              f"ack_overhead_ratio={ch['overhead']['ratio']:.3f}")
     if doc["quire_ab"]:
         for key, t in doc["quire_ab"]["tasks"].items():
             print(f"stream_bench/quire_ab/{key},0,"

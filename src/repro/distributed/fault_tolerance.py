@@ -76,17 +76,58 @@ class StepWatchdog:
         return out, dt
 
 
+@dataclasses.dataclass(frozen=True)
+class RestartPolicy:
+    """Bounded-restart + exponential-backoff policy.
+
+    Shared control logic: the training supervisor (``run_with_restarts``)
+    and the ingest worker pool (``repro.ingest.workers``) both respawn a
+    failed unit of work at most ``max_restarts`` times, sleeping
+    ``delay(attempt)`` before attempt *n* (1-based) — ``backoff_s`` scaled
+    by ``backoff_factor`` per prior failure, capped at ``max_backoff_s``.
+    """
+
+    max_restarts: int = 3
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 2.0
+
+    def delay(self, attempt: int) -> float:
+        """Seconds to back off before restart ``attempt`` (1-based)."""
+        return min(self.backoff_s
+                   * self.backoff_factor ** max(attempt - 1, 0),
+                   self.max_backoff_s)
+
+    def allows(self, restarts_so_far: int) -> bool:
+        return restarts_so_far < self.max_restarts
+
+
 def run_with_restarts(train_once: Callable[[int], int],
-                      cfg: ElasticConfig = ElasticConfig()) -> int:
+                      cfg: ElasticConfig = ElasticConfig(),
+                      policy: Optional[RestartPolicy] = None,
+                      exceptions: Tuple = (RuntimeError, OSError),
+                      sleep: Callable[[float], None] = time.sleep) -> int:
     """Supervisor loop: (re)start training from the latest checkpoint until
-    it finishes; each attempt may run on a re-built mesh."""
+    it finishes; each attempt may run on a re-built mesh.
+
+    ``policy`` generalizes the restart budget/backoff (default: the legacy
+    behaviour — ``cfg.max_restarts`` attempts, flat 10 ms backoff);
+    ``exceptions`` is the retryable set (anything else propagates
+    immediately); ``sleep`` is injectable so backoff is testable without
+    real waiting."""
+    if policy is None:
+        policy = RestartPolicy(max_restarts=cfg.max_restarts,
+                               backoff_s=0.01, backoff_factor=1.0,
+                               max_backoff_s=0.01)
     attempts = 0
     last_step = 0
-    while attempts <= cfg.max_restarts:
+    while True:
         try:
             return train_once(last_step)
-        except (RuntimeError, OSError) as e:  # device loss / io failure
+        except exceptions:  # device loss / io failure / worker death
+            if not policy.allows(attempts):
+                raise RuntimeError(
+                    f"exceeded {policy.max_restarts} restarts")
             attempts += 1
-            time.sleep(0.01)
+            sleep(policy.delay(attempts))
             continue
-    raise RuntimeError(f"exceeded {cfg.max_restarts} restarts")

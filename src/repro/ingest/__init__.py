@@ -10,21 +10,25 @@ evicts stalled patients on a timeout (``sessions``), a bounded-queue result
 supervisor publishing per-patient telemetry (``supervisor``), and a fleet
 replay client for soak runs and parity tests (``simulator``).
 """
-from .protocol import (BYE, DATA, EVICTED, HELLO, Frame, FrameDecoder,
-                       ProtocolError, bye, data, decode_body, encode_frame,
-                       encode_stream, evicted, hello, loopback)
+from .client import ClientStats, ReplayingClient
+from .protocol import (ACK, BYE, DATA, EVICTED, HELLO, Frame, FrameDecoder,
+                       ProtocolError, ack, auth_token, bye, check_auth,
+                       data, decode_body, encode_frame, encode_stream,
+                       evicted, hello, loopback)
 from .server import IngestServer
 from .sessions import ModalityState, PatientSession, SessionManager
-from .simulator import FleetSimulator, PatientPlan
+from .simulator import ChaosPlan, FleetSimulator, PatientPlan
+from .spill import ResultSpill
 from .supervisor import Supervisor
 from .workers import (WorkerConfig, aggregate_rollup, partition_plans,
                       run_worker_fleet)
 
 __all__ = [
-    "BYE", "DATA", "EVICTED", "HELLO", "FleetSimulator", "Frame",
-    "FrameDecoder", "IngestServer", "ModalityState", "PatientPlan",
-    "PatientSession", "ProtocolError", "SessionManager", "Supervisor",
-    "WorkerConfig", "aggregate_rollup", "bye", "data", "decode_body",
-    "encode_frame", "encode_stream", "evicted", "hello", "loopback",
-    "partition_plans", "run_worker_fleet",
+    "ACK", "BYE", "DATA", "EVICTED", "HELLO", "ChaosPlan", "ClientStats",
+    "FleetSimulator", "Frame", "FrameDecoder", "IngestServer",
+    "ModalityState", "PatientPlan", "PatientSession", "ProtocolError",
+    "ReplayingClient", "ResultSpill", "SessionManager", "Supervisor",
+    "WorkerConfig", "ack", "aggregate_rollup", "auth_token", "bye",
+    "check_auth", "data", "decode_body", "encode_frame", "encode_stream",
+    "evicted", "hello", "loopback", "partition_plans", "run_worker_fleet",
 ]

@@ -9,27 +9,46 @@ resume on a fresh connection mid-stream.  Layout, all fields big-endian:
     body:
       2s   magic  = b"PH"
       u8   version = 1
-      u8   frame type (HELLO=1, DATA=2, BYE=3, EVICTED=4)
+      u8   frame type (HELLO=1, DATA=2, BYE=3, EVICTED=4, ACK=5)
       str  patient                (u8 length + utf-8 bytes)
       str  task
-      str  modality               ("" for HELLO/BYE; the close REASON for
-                                   EVICTED — "stall" or "bye")
+      str  modality               ("" for BYE; an optional auth token for
+                                   HELLO; the close REASON for EVICTED —
+                                   "stall" or "bye"; the acked modality for
+                                   ACK, "" for the post-HELLO barrier)
       u32  seq                    (per-(patient, modality) sample-frame
-                                   counter; 0 for HELLO/BYE/EVICTED)
+                                   counter; the cumulative scored frontier
+                                   for ACK; 0 for HELLO/BYE/EVICTED)
       u8   channels
       u8   dtype code             (0 = float32, 1 = float64)
-      u32  n_samples
+      u32  n_samples              (the CREDIT window for ACK frames —
+                                   non-DATA frames carry no payload, so the
+                                   slot is free and the layout unchanged)
       ...  payload                (channels × n_samples row-major samples)
       u32  crc32 of everything above in the body
 
 ``HELLO`` opens (or re-opens, after a disconnect) a patient session; ``BYE``
 declares a clean end of stream, letting the server finalize the patient's
 tracker immediately instead of waiting for the stall reaper.  ``DATA``
-carries one in-order chunk of one modality.  ``EVICTED`` is the one
-server→client frame: an explicit close notice carrying the reason
+carries one in-order chunk of one modality.  Two frames flow
+server→client: ``EVICTED``, an explicit close notice carrying the reason
 ("stall" or "bye") in the modality field, so a client that was silently
 reaped learns it must re-HELLO rather than keep streaming into a dead
-session.  The decoder is incremental —
+session; and ``ACK``, the flow-control frame — ``seq`` is the cumulative
+frontier (every frame below it has been delivered IN ORDER to the scoring
+engine) for one (patient, modality) stream and the n_samples slot carries
+the credit window (how many frames past the frontier the server will
+buffer).  After each HELLO the server replies with one ACK per known
+modality (the resume frontiers) followed by a barrier ACK with
+``modality == ""`` — a fresh session sends only the barrier, telling the
+client to replay from zero.  Clients keep a replay buffer of unacked
+frames and resend them on reconnect; the session layer's sequence
+tracking dedupes the overlap, so delivery is at-least-once on the wire
+and exactly-once into the engine.
+
+``HELLO`` optionally carries a shared-secret auth token in its (otherwise
+empty) modality field — ``auth_token()`` computes the HMAC-SHA256 digest a
+server started with ``auth_secret`` requires.  The decoder is incremental —
 feed it arbitrary byte splits (the TCP reader does) and it yields every
 complete frame — and validates magic, version, CRC, and a frame-size bound
 before any payload is materialized.
@@ -41,6 +60,8 @@ fast-lane transport tests and ``stream_bench --transport loopback`` use.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import hmac as _hmac
 import struct
 import zlib
 from typing import Iterable, Iterator, List, Optional
@@ -55,7 +76,9 @@ DATA = 2
 BYE = 3
 EVICTED = 4     # server → client: session closed (stall eviction or BYE
                 # acknowledgment); the reason string rides the modality field
-_TYPES = (HELLO, DATA, BYE, EVICTED)
+ACK = 5         # server → client: cumulative scored frontier + credit
+                # window for one (patient, modality) stream
+_TYPES = (HELLO, DATA, BYE, EVICTED, ACK)
 
 # corrupt length prefixes must not allocate gigabytes: one frame is bounded
 # by a few seconds of the densest modality (16 kHz × 2ch float64 ≈ 256 KiB/s)
@@ -79,13 +102,17 @@ class Frame:
     modality: str = ""
     seq: int = 0
     payload: Optional[np.ndarray] = None  # (channels, n_samples) float
+    credit: int = 0                       # ACK only: frames past the
+                                          # frontier the server will buffer
 
     def nbytes(self) -> int:
         return self.payload.nbytes if self.payload is not None else 0
 
 
-def hello(patient: str, task: str) -> Frame:
-    return Frame(HELLO, patient, task)
+def hello(patient: str, task: str, auth: Optional[str] = None) -> Frame:
+    """``auth`` (an ``auth_token`` digest) rides the otherwise-empty
+    modality field — zero wire-format change for unauthenticated fleets."""
+    return Frame(HELLO, patient, task, auth or "")
 
 
 def bye(patient: str, task: str) -> Frame:
@@ -97,6 +124,31 @@ def evicted(patient: str, task: str, reason: str) -> Frame:
     the client WHY its session ended — ``"stall"`` (reaper timeout) or
     ``"bye"`` (clean-close acknowledgment)."""
     return Frame(EVICTED, patient, task, reason)
+
+
+def ack(patient: str, task: str, modality: str, seq: int,
+        credit: int = 0) -> Frame:
+    """Server-originated cumulative ACK: every frame of ``modality`` with a
+    sequence number below ``seq`` has been delivered in order to the
+    engine; the client may trim them from its replay buffer and keep at
+    most ``credit`` frames in flight past the frontier.  ``modality == ""``
+    is the post-HELLO barrier (resume-frontier set complete)."""
+    return Frame(ACK, patient, task, modality, seq, credit=int(credit))
+
+
+def auth_token(secret: str, patient: str, task: str) -> str:
+    """The HELLO auth digest for one (patient, task) stream under a shared
+    secret: HMAC-SHA256 hex, bound to the stream identity so a captured
+    token cannot open a different patient's session."""
+    return _hmac.new(secret.encode("utf-8"),
+                     f"{patient}|{task}".encode("utf-8"),
+                     hashlib.sha256).hexdigest()
+
+
+def check_auth(secret: str, frame: Frame) -> bool:
+    """Constant-time verification of a HELLO frame's auth token."""
+    want = auth_token(secret, frame.patient, frame.task)
+    return _hmac.compare_digest(frame.modality, want)
 
 
 def data(patient: str, task: str, modality: str, seq: int,
@@ -125,7 +177,10 @@ def encode_frame(frame: Frame) -> bytes:
         channels, n = payload.shape
         raw = payload.astype(_DTYPES[code].newbyteorder(">")).tobytes()
     else:
-        code, channels, n, raw = 0, 0, 0, b""
+        # non-DATA frames have no payload; ACK reuses the free n_samples
+        # slot for its credit window
+        n = frame.credit if frame.ftype == ACK else 0
+        code, channels, raw = 0, 0, b""
     body = b"".join([
         MAGIC, struct.pack(">BB", VERSION, frame.ftype),
         _pack_str(frame.patient), _pack_str(frame.task),
@@ -191,7 +246,8 @@ def decode_body(body: bytes) -> Frame:
                 f"{channels}×{n} {dt.name})")
         payload = np.frombuffer(raw, dt).reshape(channels, n)
         payload = payload.astype(dt.newbyteorder("="))
-    return Frame(ftype, patient, task, modality, seq, payload)
+    credit = n if ftype == ACK else 0
+    return Frame(ftype, patient, task, modality, seq, payload, credit)
 
 
 class FrameDecoder:

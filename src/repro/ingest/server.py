@@ -37,7 +37,7 @@ from typing import Optional
 
 from repro.obs import ScrapeServer
 
-from .protocol import FrameDecoder, ProtocolError
+from .protocol import HELLO, FrameDecoder, ProtocolError, check_auth
 from .sessions import SessionManager
 
 
@@ -46,7 +46,8 @@ class IngestServer:
                  port: int = 0, high_watermark: int = 4096,
                  reap_interval_s: Optional[float] = None,
                  read_bytes: int = 1 << 16, max_suspend_s: float = 1.0,
-                 supervisor=None, scrape_port: Optional[int] = None):
+                 supervisor=None, scrape_port: Optional[int] = None,
+                 ack: bool = True, auth_secret: Optional[str] = None):
         """``port=0`` binds an ephemeral port (read it back from ``.port``
         after ``start``); ``reap_interval_s`` defaults to a quarter of the
         session manager's stall timeout.
@@ -55,6 +56,19 @@ class IngestServer:
         ephemeral; read ``.scrape_port`` back after ``start``).
         ``supervisor`` (optional) provides the ``/telemetry`` JSON body;
         without one, ``/telemetry`` serves the ledger summaries directly.
+
+        ``ack`` arms the server→client flow-control plane: after each
+        processed chunk the session manager's cumulative ACKs (scored
+        frontier + credit window per (patient, modality), resume set +
+        barrier after every HELLO) are written back on the patient's live
+        connection — what ``ReplayingClient`` uses to trim its replay
+        buffer and rewind on reconnect.  Off = the PR-4 wire behaviour
+        exactly (the ``--chaos-max`` overhead A/B's baseline arm).
+
+        ``auth_secret`` requires every HELLO to carry the matching
+        ``protocol.auth_token`` digest; connections failing verification
+        (or sending for a patient they never authenticated) are dropped
+        and counted in ``ingest_auth_failures_total``.
         """
         self.sessions = sessions
         self.host = host
@@ -68,6 +82,12 @@ class IngestServer:
         self.connections_total = 0
         self.protocol_errors = 0
         self.session_errors = 0   # non-protocol failures (engine/session)
+        self.auth_failures = 0
+        self.ack = bool(ack)
+        self.auth_secret = auth_secret
+        self._auth_fail_c = sessions.engine.metrics.counter(
+            "ingest_auth_failures_total",
+            "connections rejected by HELLO auth verification")
         self.supervisor = supervisor
         self.scrape_port = scrape_port   # None = disabled
         self._scrape: Optional[ScrapeServer] = None
@@ -83,7 +103,8 @@ class IngestServer:
                    "per_patient": ledger.transport_summary()}
         doc["server"] = {"connections_total": self.connections_total,
                          "protocol_errors": self.protocol_errors,
-                         "session_errors": self.session_errors}
+                         "session_errors": self.session_errors,
+                         "auth_failures": self.auth_failures}
         return doc
 
     async def start(self) -> None:
@@ -129,15 +150,37 @@ class IngestServer:
         self.connections_total += 1
         dec = FrameDecoder()
         registered = set()  # patients whose sender is this connection
+        authed = set()      # patients this connection authenticated
 
         def send(data: bytes) -> None:
             if writer.is_closing():
                 raise ConnectionError("connection closed")
             writer.write(data)
 
+        def authorize(frame) -> bool:
+            """Gate every frame when a shared secret is required: HELLO
+            must verify, anything else must follow a verified HELLO for
+            the same patient ON THIS connection."""
+            if self.auth_secret is None:
+                return True
+            if frame.ftype == HELLO:
+                if check_auth(self.auth_secret, frame):
+                    authed.add(frame.patient)
+                    return True
+            elif frame.patient in authed:
+                return True
+            self.auth_failures += 1
+            self._auth_fail_c.inc()
+            return False
+
         try:
             while True:
-                chunk = await reader.read(self.read_bytes)
+                try:
+                    chunk = await reader.read(self.read_bytes)
+                except (ConnectionError, OSError):
+                    # peer vanished (reset mid-read): same as EOF — the
+                    # session state survives for the reconnect-resume
+                    break
                 if not chunk:
                     # EOF: the session stays open for a reconnect — but a
                     # stream that ended on a torn frame is still an error
@@ -156,8 +199,12 @@ class IngestServer:
                                 track="ingest",
                                 args={"frames": len(frames),
                                       "bytes": len(chunk)})
+                rejected = False
                 try:
                     for frame in frames:
+                        if not authorize(frame):
+                            rejected = True
+                            break
                         if frame.patient not in registered:
                             registered.add(frame.patient)
                             self.sessions.register_sender(frame.patient,
@@ -172,6 +219,13 @@ class IngestServer:
                     # connection instead of killing the reader task silently
                     self.session_errors += 1
                     break
+                if rejected:
+                    break   # unauthenticated connection: drop it
+                if self.ack and frames:
+                    # the flow-control plane: cumulative ACKs + credit for
+                    # every frontier this chunk advanced, resume set +
+                    # barrier for every HELLO it carried
+                    self.sessions.flush_acks()
                 waited = 0.0
                 while (self.sessions.dispatch_backlog()
                        > self.high_watermark):
@@ -191,6 +245,20 @@ class IngestServer:
                 pass
 
     async def _reap_loop(self) -> None:
+        loop = asyncio.get_event_loop()
+        last = loop.time()
         while True:
             await asyncio.sleep(self.reap_interval_s)
+            now = loop.time()
+            overslept = now - last - self.reap_interval_s
+            last = now
+            if overslept > self.reap_interval_s:
+                # the event loop was starved (a synchronous jit compile
+                # inside a read handler can freeze it for seconds): live
+                # clients' frames are sitting unread in socket buffers,
+                # so their sessions LOOK stalled by exactly the freeze.
+                # Defer eviction one cycle — the pending reads drain
+                # during the next sleep — rather than evicting patients
+                # for a stall the server itself caused.
+                continue
             self.sessions.reap()

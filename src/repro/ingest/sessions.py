@@ -32,8 +32,9 @@ import numpy as np
 
 from repro.stream.engine import StreamEngine
 
-from .protocol import (BYE, DATA, EVICTED, HELLO, Frame, ProtocolError,
-                       encode_frame, evicted as evicted_frame)
+from .protocol import (ACK, BYE, DATA, EVICTED, HELLO, Frame, ProtocolError,
+                       ack as ack_frame, encode_frame,
+                       evicted as evicted_frame)
 
 
 @dataclasses.dataclass
@@ -48,6 +49,8 @@ class ModalityState:
     in_gap: bool = False           # a hole is currently open
     last_seen: float = 0.0         # last DATA arrival for THIS modality
     stalled: bool = False          # currently past its modality timeout
+    acked_seq: int = -1            # frontier last sent in an ACK (-1 forces
+                                   # a resume ACK after the next HELLO)
 
 
 @dataclasses.dataclass
@@ -60,6 +63,7 @@ class PatientSession:
     connects: int = 0
     done: bool = False             # closed cleanly by BYE
     evicted: bool = False          # closed by the stall reaper
+    ack_hello: bool = False        # a HELLO awaits its barrier ACK
 
     @property
     def closed(self) -> bool:
@@ -100,6 +104,9 @@ class SessionManager:
         self._evicted_c = engine.metrics.counter(
             "ingest_evicted_notices_total",
             "EVICTED close notices, by reason and delivery")
+        self._acked_c = engine.metrics.counter(
+            "acked_frames_total",
+            "frames covered by cumulative ACKs sent to clients, by patient")
 
     # -- server→client notices ------------------------------------------------
     def register_sender(self, patient: str,
@@ -123,6 +130,47 @@ class SessionManager:
         self._evicted_c.inc(reason=reason,
                             delivered="true" if delivered else "false")
 
+    def flush_acks(self) -> int:
+        """Send a cumulative ACK for every (patient, modality) stream whose
+        scored frontier advanced since the last flush, plus — after a HELLO
+        — one resume ACK per known modality followed by the barrier ACK
+        (``modality == ""``), so a reconnecting client learns exactly where
+        to rewind its replay buffer (a fresh session gets only the barrier:
+        replay everything).  Credit is what's left of the stream's reorder
+        budget.  Best-effort like the EVICTED notice; the transport calls
+        this after each processed chunk.  Returns frames written.
+        """
+        sent = 0
+        for s in self.sessions.values():
+            dirty = [(mod, m) for mod, m in s.modalities.items()
+                     if m.next_seq > m.acked_seq]
+            if not dirty and not s.ack_hello:
+                continue
+            send = self._senders.get(s.patient)
+            if send is None:
+                continue     # no live connection: resend after the next
+                             # HELLO (which resets acked_seq)
+            for mod, m in dirty:
+                credit = max(self.reorder_cap - len(m.held), 1)
+                try:
+                    send(encode_frame(ack_frame(
+                        s.patient, s.task, mod, m.next_seq, credit)))
+                except Exception:
+                    break    # client gone mid-flush: a reconnect re-acks
+                self._acked_c.inc(m.next_seq - max(m.acked_seq, 0),
+                                  patient=s.patient)
+                m.acked_seq = m.next_seq
+                sent += 1
+            if s.ack_hello:
+                s.ack_hello = False
+                try:
+                    send(encode_frame(ack_frame(
+                        s.patient, s.task, "", 0, self.reorder_cap)))
+                    sent += 1
+                except Exception:
+                    pass
+        return sent
+
     # -- lifecycle ------------------------------------------------------------
     def _session(self, frame: Frame, now: float) -> PatientSession:
         s = self.sessions.get(frame.patient)
@@ -137,10 +185,10 @@ class SessionManager:
 
     def on_frame(self, frame: Frame, now: Optional[float] = None) -> None:
         """Process one decoded frame (HELLO / DATA / BYE)."""
-        if frame.ftype == EVICTED:
+        if frame.ftype in (EVICTED, ACK):
             raise ProtocolError(
-                f"EVICTED is server-originated; client for "
-                f"{frame.patient!r} must not send it")
+                f"frame type {frame.ftype} is server-originated; client "
+                f"for {frame.patient!r} must not send it")
         now = self.clock() if now is None else now
         s = self._session(frame, now)
         led = self.engine.ledger
@@ -152,6 +200,12 @@ class SessionManager:
         s.last_seen = now
         if frame.ftype == HELLO:
             s.connects += 1
+            # arm the resume-ACK set: every known frontier is re-announced
+            # on the next flush, then the barrier tells the client the set
+            # is complete (a fresh session announces only the barrier)
+            s.ack_hello = True
+            for m in s.modalities.values():
+                m.acked_seq = -1
             led.record_transport(frame.patient, connects=1)
             return
         if frame.ftype == BYE:

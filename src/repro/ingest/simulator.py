@@ -37,10 +37,31 @@ from repro.data.biosignals import (AUDIO_SR, ECG_FS, IMU_SR,
 from repro.stream.engine import StreamEngine
 from repro.stream.pipelines import RPEAK_WINDOW_S
 
-from .protocol import Frame, FrameDecoder, bye, data, encode_frame, hello
+from .client import ClientStats, ReplayingClient
+from .protocol import (DATA, HELLO, Frame, FrameDecoder, bye, data,
+                       encode_frame, hello)
 from .sessions import SessionManager
 
 _MODALITY_RATES = {"audio": AUDIO_SR, "imu": IMU_SR, "ecg": ECG_FS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosPlan:
+    """Deterministic fault schedule for one chaos run.
+
+    ``kill_worker``/``kill_after_s`` name a worker-pool member to SIGKILL
+    mid-stream (consumed by ``ingest.workers``); the connection-level
+    faults are applied inside ``run_tcp`` through the ``ReplayingClient``
+    chaos hooks; ``stall_pump_s`` freezes the supervisor consumer (the
+    result-queue overflow → spill path's prey)."""
+
+    kill_worker: Optional[int] = None       # worker index to SIGKILL
+    kill_after_s: float = 0.2               # serving time before the kill
+    partition_patients: Tuple[str, ...] = ()  # hard-abort these patients'
+    partition_after_frames: int = 4           # connections after N frames
+    corrupt_patients: Tuple[str, ...] = ()    # flip one bit in these
+    corrupt_at_frame: int = 3                 # patients' Nth DATA frame
+    stall_pump_s: float = 0.0               # supervisor consumer stall
 
 
 @dataclasses.dataclass
@@ -211,28 +232,73 @@ class FleetSimulator:
     async def run_tcp(self, host: str, port: int, arrival_seed: int = 1,
                       realtime_factor: float = 0.0,
                       jitter_s: float = 0.0,
-                      plans: Optional[Sequence[PatientPlan]] = None) -> None:
-        """One asyncio client per patient against a live ``IngestServer``.
+                      plans: Optional[Sequence[PatientPlan]] = None, *,
+                      lookup=None, flow_control: bool = True,
+                      auth_secret: Optional[str] = None,
+                      chaos: Optional[ChaosPlan] = None,
+                      stats_out: Optional[Dict[str, ClientStats]] = None,
+                      ledger=None,
+                      clients_out: Optional[Dict[str,
+                                                 ReplayingClient]] = None,
+                      ) -> None:
+        """One ``ReplayingClient`` per patient against a live
+        ``IngestServer``.
 
         ``realtime_factor`` r > 0 sleeps chunk_duration/r between frames
         (r=1 is wall-clock-faithful replay); 0 sends as fast as the socket
         allows.  ``jitter_s`` adds uniform random inter-frame delay.  A plan
-        with several segments closes the socket between them — a mid-window
-        disconnect — and reconnects for the next.  ``plans`` restricts the
-        drive to a subset of the fleet — how the multi-process worker pool
-        points each patient at the worker that owns it.
+        with several segments gracefully closes the connection between them
+        — a mid-window disconnect — and reconnects for the next.  ``plans``
+        restricts the drive to a subset of the fleet — how the multi-process
+        worker pool points each patient at the worker that owns it.
+
+        ``lookup`` (patient → ``(host, port)`` or ``None``) overrides the
+        fixed endpoint — the worker pool passes its live failover map so a
+        respawned worker's new port is found automatically.  ``chaos``
+        applies the connection-level fault schedule (partitions and frame
+        corruptions; worker kills live in ``ingest.workers``).
+        ``stats_out``/``clients_out`` collect per-patient delivery stats
+        and the live clients (the pool parks finished clients there for
+        failover re-delivery); ``ledger`` records each client's
+        ``replayed_frames`` into the transport column.
         """
         rng = np.random.default_rng(arrival_seed)
         plans = self.plans if plans is None else list(plans)
+        chaos = chaos or ChaosPlan()
 
         async def one_patient(plan: PatientPlan, seed: int) -> None:
             prng = np.random.default_rng(seed)
-            for seg in self.segments(plan, prng):
-                reader, writer = await asyncio.open_connection(host, port)
-                try:
+            find = ((lambda: (host, port)) if lookup is None
+                    else (lambda p=plan.patient: lookup(p)))
+            cli = ReplayingClient(plan.patient, plan.task, find,
+                                  flow_control=flow_control,
+                                  auth_secret=auth_secret)
+            if clients_out is not None:
+                clients_out[plan.patient] = cli
+            part_at = (chaos.partition_after_frames
+                       if plan.patient in chaos.partition_patients else None)
+            corrupt_at = (chaos.corrupt_at_frame
+                          if plan.patient in chaos.corrupt_patients else None)
+            n_data = 0
+            try:
+                # a permanently-failed worker aborts this patient's drive
+                # (the lookup raises); contain it so the sibling patients'
+                # coroutines finish and the stats still get recorded — the
+                # pool surfaces the loss through ``failed_workers``
+                for si, seg in enumerate(self.segments(plan, prng)):
+                    if si:
+                        await cli.disconnect()   # planned mid-stream cut
                     for f in seg:
-                        writer.write(encode_frame(f))
-                        await writer.drain()
+                        if f.ftype == HELLO:
+                            continue     # the client owns the handshake
+                        if f.ftype == DATA:
+                            n_data += 1
+                            if corrupt_at is not None and n_data == corrupt_at:
+                                cli.corrupt_next = True
+                        await cli.send(f)
+                        if part_at is not None and n_data == part_at:
+                            part_at = None
+                            cli.partition()
                         delay = 0.0
                         if realtime_factor > 0 and f.payload is not None:
                             delay += (f.payload.shape[-1]
@@ -242,12 +308,16 @@ class FleetSimulator:
                             delay += float(prng.uniform(0, jitter_s))
                         if delay:
                             await asyncio.sleep(delay)
-                finally:
-                    writer.close()
-                    try:
-                        await writer.wait_closed()
-                    except (ConnectionError, OSError):
-                        pass
+            except ConnectionError:
+                pass
+            finally:
+                await cli.close()
+            if stats_out is not None:
+                stats_out[plan.patient] = cli.stats
+            if ledger is not None and cli.stats.replayed_frames:
+                ledger.record_transport(
+                    plan.patient,
+                    replayed_frames=cli.stats.replayed_frames)
 
         await asyncio.gather(*(
             one_patient(plan, int(rng.integers(1 << 31)))

@@ -50,11 +50,20 @@ def _percentiles(lat_s: List[float]) -> Dict[str, float]:
 class Supervisor:
     def __init__(self, engine: StreamEngine, capacity: int = 1024,
                  latency_reservoir: int = 512,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 spill=None):
+        """``spill`` (a ``repro.ingest.spill.ResultSpill``) turns queue
+        overflow from drop-oldest into an on-disk append: the evicted
+        result is written to the CRC-framed segment file and counted in
+        ``spilled_results_total{patient}``; only results the spill
+        *refuses* (disk budget exhausted) fall back to the counted drop.
+        ``recover_spill()`` re-admits a previous incarnation's segment."""
         self.engine = engine
         self.capacity = int(capacity)
         self.queue: Deque[WindowResult] = collections.deque()
-        self.dropped = 0
+        self.spill = spill
+        self.dropped = 0          # queue evictions (incl. spilled)
+        self.spilled = 0          # evictions persisted by the spill
         self.total_windows = 0
         self.clock = clock
         self._warn_at = 1
@@ -73,6 +82,10 @@ class Supervisor:
         self._dropped_c = self.metrics.counter(
             "result_queue_dropped_total",
             "results evicted from the supervisor queue, by patient")
+        self._spilled_c = self.metrics.counter(
+            "spilled_results_total",
+            "results persisted to the spill segment on queue overflow, "
+            "by patient")
         self._lat_h = self.metrics.histogram(
             "stream_e2e_latency_seconds",
             "window ready -> batch materialized, raw-sample reservoir",
@@ -82,7 +95,27 @@ class Supervisor:
 
     # -- drain ----------------------------------------------------------------
     def _attribute_drop(self, victim: WindowResult) -> None:
+        if self.spill is not None and self.spill.append(victim):
+            self._spilled_c.inc(patient=victim.patient)
+            self.spilled += 1
+            return          # persisted, not lost — attributed separately
         self._dropped_c.inc(patient=victim.patient)
+
+    def recover_spill(self) -> int:
+        """Re-admit a previous incarnation's spilled results (restart
+        recovery): everything intact in the spill file at ``self.spill.
+        path`` rejoins the queue, oldest first; returns how many."""
+        if self.spill is None:
+            return 0
+        rows = type(self.spill).recover(self.spill.path)
+        for r in rows:
+            self.total_windows += 1
+            self._windows_c.inc(patient=r.patient)
+            self.dropped, self._warn_at = bounded_admit(
+                self.queue, r, self.capacity, self.dropped, self._warn_at,
+                self._drop_label, on_drop=self._attribute_drop)
+        self._depth_g.set(len(self.queue))
+        return len(rows)
 
     def _drop_label(self) -> str:
         worst = sorted(self._dropped_c.items(),
@@ -158,11 +191,16 @@ class Supervisor:
                 "latency_ms": _percentiles(self._lat_h.samples(patient=pid)),
             }
         self._depth_g.set(len(self.queue))
+        spill = (self.spill.counters() if self.spill is not None
+                 else {"spilled": 0, "spill_rejected": 0, "spill_bytes": 0,
+                       "spilled_by_patient": {}})
         return {
+            # "dropped" means LOST: spilled results are persisted, so they
+            # are reported under the spill keys, not as drops
             "queue": {"capacity": self.capacity, "depth": len(self.queue),
-                      "dropped": self.dropped,
+                      "dropped": self.dropped - self.spilled,
                       "dropped_by_patient": self.dropped_by_patient(),
-                      "total_windows": self.total_windows},
+                      "total_windows": self.total_windows, **spill},
             "latency_ms": _percentiles(self.latency_samples()),
             "patients": pats,
             "per_patient": self.engine.ledger.transport_summary(),

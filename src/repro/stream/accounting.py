@@ -133,6 +133,9 @@ class TransportStats:
     frames: int = 0               # DATA frames received (incl. dups/held)
     bytes: int = 0                # payload bytes of those frames
     dup_frames: int = 0           # dropped as duplicates
+    replayed_frames: int = 0      # re-sent by the client after a reconnect
+                                  # (failover replay; client-reported, deduped
+                                  # into exactly-once by the seq logic)
     reordered_frames: int = 0     # arrived early, held in the reorder buffer
     gap_events: int = 0           # in-order → gapped transitions
     connects: int = 0             # HELLOs (reconnects = connects - 1)

@@ -1,0 +1,114 @@
+"""Restart policy, supervised-restart loop, and checkpoint restore
+walkback — the shared control logic under both the training supervisor and
+the ingest worker pool's crash failover."""
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.fault_tolerance import (ElasticConfig, RestartPolicy,
+                                               run_with_restarts)
+
+
+# ---------------------------------------------------------------------------
+# RestartPolicy: budget + exponential backoff
+# ---------------------------------------------------------------------------
+def test_restart_policy_backoff_doubles_and_caps():
+    p = RestartPolicy(max_restarts=5, backoff_s=0.05, backoff_factor=2.0,
+                      max_backoff_s=0.3)
+    assert p.delay(1) == pytest.approx(0.05)
+    assert p.delay(2) == pytest.approx(0.10)
+    assert p.delay(3) == pytest.approx(0.20)
+    assert p.delay(4) == pytest.approx(0.3)      # capped
+    assert p.delay(10) == pytest.approx(0.3)
+
+
+def test_restart_policy_budget():
+    p = RestartPolicy(max_restarts=2)
+    assert p.allows(0) and p.allows(1)
+    assert not p.allows(2) and not p.allows(3)
+
+
+def test_run_with_restarts_recovers_after_transient_failures():
+    calls = []
+
+    def train_once(last_step):
+        calls.append(last_step)
+        if len(calls) < 3:
+            raise RuntimeError("device lost")
+        return 42
+
+    slept = []
+    out = run_with_restarts(train_once,
+                            policy=RestartPolicy(max_restarts=3,
+                                                 backoff_s=0.01),
+                            sleep=slept.append)
+    assert out == 42
+    assert len(calls) == 3
+    # backoff doubled between the two restarts
+    assert slept == [pytest.approx(0.01), pytest.approx(0.02)]
+
+
+def test_run_with_restarts_exhausts_budget():
+    def always_dies(last_step):
+        raise OSError("io down")
+
+    with pytest.raises(RuntimeError, match="exceeded 2 restarts"):
+        run_with_restarts(always_dies,
+                          policy=RestartPolicy(max_restarts=2),
+                          sleep=lambda s: None)
+
+
+def test_run_with_restarts_default_policy_uses_cfg_budget():
+    n = [0]
+
+    def always_dies(last_step):
+        n[0] += 1
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError, match="exceeded 1 restarts"):
+        run_with_restarts(always_dies, cfg=ElasticConfig(max_restarts=1),
+                          sleep=lambda s: None)
+    assert n[0] == 2      # the budget bounds RE-starts: 1 + 1 attempts
+
+
+def test_run_with_restarts_non_retryable_propagates():
+    def typo(last_step):
+        raise ValueError("not a device failure")
+
+    with pytest.raises(ValueError):
+        run_with_restarts(typo, sleep=lambda s: None)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint restore walkback: the node-failure-mid-save story
+# ---------------------------------------------------------------------------
+def _state():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.zeros((3,), dtype=np.float32)}
+
+
+def test_restore_walks_back_past_corrupt_newest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    s = _state()
+    for step in (1, 2, 3):
+        s["w"] = s["w"] + 1.0
+        mgr.save(step, s, block=True)
+    # corrupt the newest checkpoint's payload (crash mid-save after the
+    # rename — the bytes are there but unreadable)
+    with open(tmp_path / "step-000000003" / "state.npz", "wb") as f:
+        f.write(b"not a zipfile")
+    got, step = mgr.restore(_state())
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  _state()["w"] + 2.0)
+
+
+def test_restore_raises_when_every_checkpoint_is_corrupt(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    for step in (1, 2):
+        mgr.save(step, _state(), block=True)
+    for d in tmp_path.glob("step-*"):
+        with open(d / "state.npz", "wb") as f:
+            f.write(b"torn")
+    with pytest.raises(FileNotFoundError, match="no restorable checkpoint"):
+        mgr.restore(_state())

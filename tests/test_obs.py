@@ -25,7 +25,7 @@ import numpy as np
 import pytest
 
 from repro.apps.cough import train_reference_forest
-from repro.ingest import (EVICTED, FleetSimulator, FrameDecoder,
+from repro.ingest import (ACK, EVICTED, FleetSimulator, FrameDecoder,
                           IngestServer, ProtocolError, SessionManager,
                           Supervisor, data, evicted, hello)
 from repro.obs import (NULL_METRICS, Counter, Gauge, MetricsRegistry,
@@ -271,15 +271,23 @@ def test_evicted_notice_reaches_tcp_client():
             writer.write(encode_frame(
                 data("p-0", "rpeak", "ecg", 0, np.zeros((1, 500)))))
             await writer.drain()
-            # go silent; the reaper must evict and notify on THIS socket
-            raw = await asyncio.wait_for(reader.read(1 << 16), timeout=5.0)
+            # go silent; the flow-control ACKs stream first, then the
+            # reaper must evict and notify on THIS socket
+            dec = FrameDecoder()
+            frames = []
+            deadline = asyncio.get_event_loop().time() + 5.0
+            while not any(f.ftype == EVICTED for f in frames):
+                budget = deadline - asyncio.get_event_loop().time()
+                raw = await asyncio.wait_for(reader.read(1 << 16),
+                                             timeout=max(budget, 0.01))
+                frames.extend(dec.feed(raw))
             writer.close()
-            return raw
+            return frames
 
-    raw = asyncio.run(main())
-    frames = FrameDecoder().feed(raw)
-    assert [f.ftype for f in frames] == [EVICTED]
-    assert frames[0].patient == "p-0" and frames[0].modality == "stall"
+    frames = asyncio.run(main())
+    assert frames[-1].ftype == EVICTED
+    assert all(f.ftype == ACK for f in frames[:-1])   # the flow-control plane
+    assert frames[-1].patient == "p-0" and frames[-1].modality == "stall"
     assert eng.ledger.transport_summary()["p-0"]["evictions"] == 1
     c = eng.metrics.counter("ingest_evicted_notices_total")
     assert c.value(reason="stall", delivered="true") == 1

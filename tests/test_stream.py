@@ -319,6 +319,7 @@ def test_stream_bench_json_schema_matches_committed(forest, tmp_path):
     assert doc["ab"] is None and doc["smoke_baseline"] is None
     assert doc["scaling"] is None and doc["microbench"] is None
     assert doc["quire_ab"] is None and doc["obs_ab"] is None
+    assert doc["chaos"] is None
     # the telemetry-plane overhead A/B: paired on/off arms with fleet
     # medians and the ratio check_perf gates at a few percent
     oab = committed["obs_ab"]
@@ -337,6 +338,19 @@ def test_stream_bench_json_schema_matches_committed(forest, tmp_path):
         for arm in ("off", "on"):
             assert set(t[arm]) == {"us_per_window", "nj_per_window",
                                    "err_vs_fp32"}
+    # the fault harness record: the soak's recovery contract held (a worker
+    # was killed and every patient digest stayed bit-identical) and the
+    # fault-free ACK-plane overhead ratio is inside the check_perf gate
+    ch = committed["chaos"]
+    assert set(ch) == {"repeat", "workers", "soak", "overhead"}
+    sk = ch["soak"]
+    assert sk["worker_restarts"] >= 1
+    assert sk["digest_matches"] == sk["digest_total"] > 0
+    assert sk["failed_workers"] == []
+    assert set(ch["overhead"]["arms"]) == {"ack_on", "ack_off"}
+    for arm in ch["overhead"]["arms"].values():
+        assert set(arm) == {"fleet_us_per_window", "wall_s"}
+    assert 0.0 < ch["overhead"]["ratio"] <= 1.05   # resilience ≈ free
     ab = committed["ab"]
     assert set(ab) >= {"arms", "repeat", "ratio"}
     assert {"fused", "unfused"} <= set(ab["arms"])
